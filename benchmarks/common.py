@@ -1,0 +1,45 @@
+"""Shared benchmark utilities: wall-clock timing of jitted fns on CPU plus
+derived bytes-moved metrics. CPU timings are *proxies* — relative speedups
+of engine-vs-naive access paths mirror the paper's mechanism (fewer, better-
+ordered memory touches); absolute TPU numbers come from the roofline
+(EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_fn(fn, *args, iters: int = 5, warmup: int = 2, **kw):
+    """Median wall-time (us) of a jitted callable."""
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def emit(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def make_indices(rng, n_rows: int, n_idx: int, locality: str):
+    """Index distributions matching the paper's microbenchmark regimes."""
+    if locality == "sequential":      # all-hits analogue (B[i] = i)
+        return (np.arange(n_idx) % n_rows).astype(np.int32)
+    if locality == "uniform":         # all-miss, worst row locality
+        return rng.integers(0, n_rows, size=n_idx).astype(np.int32)
+    if locality == "zipf":            # skewed: high coalescing potential
+        return (rng.zipf(1.3, size=n_idx) % n_rows).astype(np.int32)
+    if locality == "blocked":         # high row-buffer locality
+        base = rng.integers(0, max(n_rows // 64, 1), size=n_idx // 16 + 1)
+        idx = (base[:, None] * 64 + rng.integers(0, 64, size=(len(base), 16))
+               ).reshape(-1)[:n_idx]
+        return np.clip(idx, 0, n_rows - 1).astype(np.int32)
+    raise ValueError(locality)

@@ -1,0 +1,99 @@
+"""Dry-run profiler: top HLO ops by output bytes for one cell.
+
+  PYTHONPATH=src python -m benchmarks.hlo_top <arch> <shape> [--unroll]
+      [--set k=v ...] [--top 15]
+
+This is the "profile" of the CPU-only methodology: since there is no
+wall-clock trace, we read the optimized, SPMD-partitioned HLO and rank ops
+by bytes to find what the memory/collective roofline terms are made of.
+"""
+from __future__ import annotations
+
+import sys
+
+sys.argv_backup = list(sys.argv)
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch")
+    ap.add_argument("shape")
+    ap.add_argument("--unroll", action="store_true")
+    ap.add_argument("--set", action="append", default=[])
+    ap.add_argument("--top", type=int, default=20)
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+
+    # must set device count before jax init — reuse dryrun's import order
+    from repro.launch import dryrun
+    import re
+    from collections import defaultdict
+
+    from repro.roofline.analysis import _DTYPE_BYTES, _SHAPE_RE
+
+    mesh = dryrun.make_production_mesh(multi_pod=(args.mesh == "multi"))
+    overrides = dryrun._parse_overrides(args.set)
+    import jax
+    with jax.sharding.set_mesh(mesh):
+        lowered, meta = dryrun.lower_cell(args.arch, args.shape, mesh,
+                                          unroll=args.unroll,
+                                          cfg_overrides=overrides)
+        compiled = lowered.compile()
+    txt = compiled.as_text()
+
+    def shape_bytes(s):
+        total = 0
+        for m in _SHAPE_RE.finditer(s):
+            dt, dims = m.group(1), m.group(2)
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * _DTYPE_BYTES[dt]
+        return total
+
+    per_op = defaultdict(lambda: [0, 0])
+    line_re = re.compile(r"=\s*(.*?)\s+([a-z][\w-]*)\(")
+    for line in txt.splitlines():
+        m = line_re.search(line)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        b = shape_bytes(shape_str)
+        per_op[op][0] += b
+        per_op[op][1] += 1
+    print(f"# {args.arch} x {args.shape} mesh={args.mesh} "
+          f"overrides={overrides} unroll={args.unroll}")
+    print(f"{'op':30s} {'out_bytes':>14s} {'count':>7s}")
+    for op, (b, c) in sorted(per_op.items(), key=lambda kv: -kv[1][0])[
+            :args.top]:
+        print(f"{op:30s} {b/2**30:11.2f}GiB {c:7d}")
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    print(f"\ncost_analysis: flops={cost.get('flops', 0):.3e} "
+          f"bytes={cost.get('bytes accessed', 0):.3e}")
+
+    # collective breakdown: shape histogram per kind
+    coll_re = re.compile(
+        r"=\s*(.*?)\s+(all-gather|all-reduce|reduce-scatter|all-to-all|"
+        r"collective-permute)(?:-start)?\(")
+    hist = defaultdict(lambda: [0, 0])
+    for line in txt.splitlines():
+        m = coll_re.search(line)
+        if not m:
+            continue
+        key = (m.group(2), m.group(1).strip()[:60])
+        hist[key][0] += shape_bytes(m.group(1))
+        hist[key][1] += 1
+    print("\ncollectives:")
+    for (kind, shape), (b, c) in sorted(hist.items(),
+                                        key=lambda kv: -kv[1][0])[:12]:
+        print(f"  {kind:20s} {b/2**30:9.2f}GiB x{c:4d}  {shape}")
+
+
+if __name__ == "__main__":
+    main()

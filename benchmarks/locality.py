@@ -1,0 +1,50 @@
+"""Paper Fig. 8b/c analogue: benefit of the engine vs index locality.
+
+Word-granularity setting (the paper's): a table of 4B words; HBM serves
+nothing smaller than a 512B granule, a "row" is a 2KB block staged
+HBM->VMEM. Naive traffic = one granule per access; engine traffic = one
+sequential block DMA per opened block (all words in the open block served
+from VMEM = row-buffer hits) + coalescing removes duplicate fetches.
+
+`traffic_ratio` (naive/engine bytes) is the bandwidth-utilization analogue
+of Fig 8c: >1 = the engine moves fewer bytes. Uniform sparse indices show
+the engine's worst case (few words per opened row, like the paper's 0% RBH
+baseline regime), skewed/blocked patterns its best.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, make_indices, time_fn
+from repro.core import bulk_gather, coalesce, make_row_table_plan
+
+N_WORDS = 1 << 22            # 16MB word table
+N_IDX = 16384                # one DX100 tile
+WORD_BYTES = 4
+GRANULE = 512                # min efficient random HBM touch
+BLOCK_WORDS = 512            # 2KB "row" staged to VMEM
+LANES = 128
+
+
+def run():
+    rng = np.random.default_rng(1)
+    table = jnp.asarray(rng.normal(size=(N_WORDS,)).astype(np.float32))
+
+    for loc in ("uniform", "blocked", "zipf", "sequential"):
+        idx_np = make_indices(rng, N_WORDS, N_IDX, loc)
+        idx = jnp.asarray(idx_np)
+        uniq, _, n_u = coalesce(idx)
+        plan = make_row_table_plan(uniq, n_rows=N_WORDS,
+                                   block_rows=BLOCK_WORDS, lanes=LANES)
+        blocks_opened = int(jnp.sum(plan.tile_first))
+        engine_bytes = blocks_opened * BLOCK_WORDS * WORD_BYTES
+        naive_bytes = N_IDX * GRANULE
+        factor = naive_bytes / max(engine_bytes, 1)
+        coal = N_IDX / max(int(n_u), 1)
+        words_per_row = int(n_u) / max(blocks_opened, 1)
+        t = time_fn(jax.jit(lambda t_, i_: bulk_gather(t_, i_)), table, idx)
+        emit(f"locality_{loc}", t,
+             f"rows_opened={blocks_opened} words_per_row={words_per_row:.1f}"
+             f" coalesce={coal:.2f}x traffic_ratio={factor:.2f}x")

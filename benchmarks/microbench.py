@@ -1,0 +1,61 @@
+"""Paper Fig. 8a analogue: Gather / Scatter / RMW micro-benchmarks,
+engine (reorder+coalesce) vs naive, across access types.
+
+Interpretation note: CPU wall-clock favors the naive path for scatter/RMW —
+XLA:CPU lowers a duplicate-index scatter to a cheap serial loop, and CPU
+caches hide random-access cost at this working-set size. The structural
+columns are what transfer to TPU: `ser_depth` is the longest chain of
+same-destination updates the hardware must serialize (naive) vs 1 (engine,
+unique writes after segment-reduce) — the mechanism behind the paper's
+17.8x RMW-Atomic gap; `coalesce` is duplicate traffic eliminated. The
+TPU-side effect of these is quantified in EXPERIMENTS.md §Roofline/§Perf.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, make_indices, time_fn
+from repro.core import bulk_gather, bulk_rmw, bulk_scatter
+
+N_ROWS, DIM, N_IDX = 65536, 128, 16384   # 16K tile (paper default)
+
+
+def run():
+    rng = np.random.default_rng(0)
+    table = jnp.asarray(rng.normal(size=(N_ROWS, DIM)).astype(np.float32))
+    table1d = jnp.asarray(rng.normal(size=(N_ROWS,)).astype(np.float32))
+    vals = jnp.asarray(rng.normal(size=(N_IDX, DIM)).astype(np.float32))
+    vals1d = jnp.asarray(rng.normal(size=(N_IDX,)).astype(np.float32))
+
+    for loc in ("sequential", "uniform", "zipf"):
+        idx_np = make_indices(rng, N_ROWS, N_IDX, loc)
+        idx = jnp.asarray(idx_np)
+        counts = np.bincount(idx_np, minlength=N_ROWS)
+        ser_depth = int(counts.max())
+        coalesce = N_IDX / max(int((counts > 0).sum()), 1)
+
+        naive = jax.jit(partial(bulk_gather, sort=False, dedup=False))
+        eng = jax.jit(partial(bulk_gather, sort=True, dedup=True))
+        t_n = time_fn(naive, table, idx)
+        t_e = time_fn(eng, table, idx)
+        emit(f"gather_{loc}_naive", t_n, f"rows={N_ROWS} dim={DIM}")
+        emit(f"gather_{loc}_engine", t_e,
+             f"cpu_ratio={t_n / t_e:.2f}x coalesce={coalesce:.2f}x")
+
+        t_n = time_fn(jax.jit(partial(bulk_rmw, op="ADD", optimize=False)),
+                      table1d, idx, vals1d)
+        t_e = time_fn(jax.jit(partial(bulk_rmw, op="ADD", optimize=True)),
+                      table1d, idx, vals1d)
+        emit(f"rmw_{loc}_naive-dup-scatter", t_n, f"ser_depth={ser_depth}")
+        emit(f"rmw_{loc}_engine", t_e, "ser_depth=1 (unique writes)")
+
+        t_n = time_fn(jax.jit(partial(bulk_scatter, optimize=False)),
+                      table1d, idx, vals1d)
+        t_e = time_fn(jax.jit(partial(bulk_scatter, optimize=True)),
+                      table1d, idx, vals1d)
+        emit(f"scatter_{loc}_naive", t_n, f"ser_depth={ser_depth}")
+        emit(f"scatter_{loc}_engine", t_e, "ser_depth=1 (last-write-wins)")

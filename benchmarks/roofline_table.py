@@ -1,0 +1,72 @@
+"""Aggregate results/dryrun/*/*.json into the EXPERIMENTS.md roofline
+tables. Usage: PYTHONPATH=src python -m benchmarks.roofline_table [dir]."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def fmt_bytes(b):
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def load(out_dir):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(out_dir, "*", "*.json"))):
+        d = json.load(open(f))
+        d["mesh_label"] = d.get("mesh_label") or f.split(os.sep)[-2]
+        rows.append(d)
+    return rows
+
+
+def table(rows, mesh_label):
+    print(f"\n### mesh = {mesh_label}\n")
+    print("| arch | shape | status | compute_s | memory_s | coll_s | "
+          "dominant | useful | temp/dev | params |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for d in rows:
+        if d["mesh_label"] != mesh_label:
+            continue
+        if d["status"] == "skipped":
+            print(f"| {d['arch']} | {d['shape']} | skipped (full attn) "
+                  f"| – | – | – | – | – | – | – |")
+            continue
+        if d["status"] == "error":
+            print(f"| {d['arch']} | {d['shape']} | ERROR | – | – | – | – "
+                  f"| – | – | – |")
+            continue
+        r = d["roofline"]
+        mem = d.get("memory_analysis", {})
+        print(f"| {d['arch']} | {d['shape']} | ok "
+              f"| {r['compute_s']:.2e} | {r['memory_s']:.2e} "
+              f"| {r['collective_s']:.2e} | **{r['dominant']}** "
+              f"| {r['useful_ratio']:.2f} "
+              f"| {fmt_bytes(mem.get('temp_size_in_bytes', 0))} "
+              f"| {d['n_params']/1e9:.1f}B |")
+
+
+def main():
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    rows = load(out_dir)
+    for mesh in ("single", "multi"):
+        table(rows, mesh)
+    # summary stats
+    ok = [r for r in rows if r["status"] == "ok"]
+    print(f"\ncells ok: {len(ok)}, "
+          f"skipped: {sum(1 for r in rows if r['status'] == 'skipped')}, "
+          f"errors: {sum(1 for r in rows if r['status'] == 'error')}")
+    doms = {}
+    for r in ok:
+        doms[r["roofline"]["dominant"]] = doms.get(
+            r["roofline"]["dominant"], 0) + 1
+    print("dominant terms:", doms)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  Fig 8a  -> microbench   (gather/scatter/RMW, engine vs naive)
+  Fig 8bc -> locality     (index locality sweep: traffic + coalescing)
+  Fig 9/10-> workloads    (embedding grad, MoE dispatch, paged KV, train)
+  Fig 13  -> tilesize     (bulk tile-size sensitivity)
+
+Output: ``name,us_per_call,derived`` CSV on stdout.
+Roofline-derived TPU numbers live in EXPERIMENTS.md (from the dry-run).
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import locality, microbench, tilesize, workloads
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for name, mod in (("microbench", microbench), ("locality", locality),
+                      ("workloads", workloads), ("tilesize", tilesize)):
+        if only and only != name:
+            continue
+        print(f"# --- {name} ---", flush=True)
+        mod.run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""The paper's own programming model, end to end (Fig. 7 + Table 1).
+
+Three Table-1 workload patterns written as declarative access patterns,
+compiled by the DX100 compiler passes into 8-instruction AccessPrograms,
+and executed by the engine — including the xRAGE/Spatter scatter, the UME
+conditional RMW, and the NAS-CG CSR range loop.
+
+  PYTHONPATH=src python examples/spatter_gather.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (Access, BinOp, Compare, Engine, Load, Pattern,
+                        RangeLoop, Var, compile_pattern, run_tiled)
+
+
+def spatter_xrage():
+    """Spatter XRAGE: A[B[i]] = C[i] (bulk scatter from a trace-like map)."""
+    rng = np.random.default_rng(0)
+    n = 30000
+    A = np.zeros(4096, np.float32)
+    B = rng.integers(0, 4096, size=n).astype(np.int32)
+    C = rng.normal(size=n).astype(np.float32)
+    pat = Pattern([Access("ST", "A", Load("B", Var("i")),
+                          value=Load("C", Var("i")), dtype="f32")],
+                  name="xrage_scatter")
+    prog, _ = compile_pattern(pat, tile_size=16384)
+    print(f"xrage: compiled to {len(prog.instrs)} DX100 instructions")
+    eng = Engine(tile_size=16384)
+    env, _, _ = run_tiled(eng, pat, {"A": jnp.asarray(A),
+                                     "B": jnp.asarray(B),
+                                     "C": jnp.asarray(C)}, n=n)
+    ref = A.copy()
+    for i in range(n):
+        ref[B[i]] = C[i]
+    np.testing.assert_allclose(np.asarray(env["A"]), ref)
+    print("xrage: engine result == sequential loop reference")
+
+
+def ume_gradient():
+    """UME GZ: conditional RMW  if (D[i] >= F): A[B[i]] += V[i]."""
+    rng = np.random.default_rng(1)
+    n = 20000
+    A = np.zeros(2048, np.float32)
+    B = rng.integers(0, 2048, size=n).astype(np.int32)
+    D = rng.normal(size=n).astype(np.float32)
+    V = rng.normal(size=n).astype(np.float32)
+    pat = Pattern([Access("RMW", "A", Load("B", Var("i")),
+                          value=Load("V", Var("i")), op="ADD", dtype="f32",
+                          cond=Compare("GE", Load("D", Var("i")), 0.0))],
+                  name="ume_gz")
+    eng = Engine(tile_size=8192)
+    env, _, _ = run_tiled(eng, pat, {"A": jnp.asarray(A),
+                                     "B": jnp.asarray(B),
+                                     "D": jnp.asarray(D),
+                                     "V": jnp.asarray(V)}, n=n)
+    ref = A.copy()
+    for i in range(n):
+        if D[i] >= 0:
+            ref[B[i]] += V[i]
+    np.testing.assert_allclose(np.asarray(env["A"]), ref, rtol=1e-4,
+                               atol=1e-4)
+    print("ume:   conditional RMW == loop reference "
+          f"({(D >= 0).mean():.0%} of lanes active)")
+
+
+def nas_cg():
+    """NAS CG row loop: for i: for j in [H[i], H[i+1]): y[i] += A[B[j]]*X[j]
+    — the indirect load side runs through the range fuser."""
+    rng = np.random.default_rng(2)
+    rows, nnz = 512, 16384
+    H = np.zeros(rows + 1, np.int32)
+    H[1:] = np.cumsum(rng.multinomial(nnz, [1 / rows] * rows))
+    B = rng.integers(0, 4096, size=nnz).astype(np.int32)
+    A = rng.normal(size=4096).astype(np.float32)
+    pat = Pattern([Access("LD", "A", Load("B", Var("j")), dtype="f32")],
+                  range_loop=RangeLoop("j", Load("H", Var("i")),
+                                       Load("H", BinOp("ADD", Var("i"), 1))),
+                  name="nas_cg")
+    eng = Engine(tile_size=32768)
+    env, spd, info = run_tiled(eng, pat, {"A": jnp.asarray(A),
+                                          "B": jnp.asarray(B),
+                                          "H": jnp.asarray(H)}, n=rows)
+    got = np.asarray(spd[info["loads"]["A"]])[:nnz]
+    np.testing.assert_allclose(got, A[B])
+    print(f"cg:    range-fused {rows} CSR rows -> {nnz} bulk loads, exact")
+
+
+if __name__ == "__main__":
+    spatter_xrage()
+    ume_gradient()
+    nas_cg()

@@ -1,0 +1,13 @@
+"""grok-1-314b [moe]: 64L d_model=6144 48H (GQA kv=8) d_ff=32768
+vocab=131072, MoE 8 experts top-2. [hf:xai-org/grok-1; unverified]
+
+8 experts on a 16-way model axis => expert-sharding factor 2 (each expert's
+FFN tensor-split 2-way within the axis) — paper §6.6 core-multiplexing."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b", family="moe",
+    n_layers=64, d_model=6144, n_heads=48, n_kv_heads=8,
+    d_ff=32768, vocab=131072, head_dim=128,
+    n_experts=8, top_k=2, rope_theta=1e4,
+)

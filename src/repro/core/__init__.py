@@ -1,0 +1,27 @@
+"""repro.core — DX100 as a composable JAX module.
+
+Public API:
+  isa           the 8-instruction ISA + AccessProgram
+  Engine        program executor
+  bulk_gather / bulk_scatter / bulk_rmw   functional bulk-access ops
+  fuse_ranges   range fuser
+  compile_pattern / Pattern / ...         compiler passes
+  reorder       sort / coalesce / row-table plan / interleave primitives
+"""
+from repro.core import isa, reorder
+from repro.core.bulk_ops import bulk_gather, bulk_rmw, bulk_scatter
+from repro.core.compiler import (Access, BinOp, Compare, LegalityError, Load,
+                                 Pattern, RangeLoop, Var, compile_pattern,
+                                 run_tiled)
+from repro.core.engine import Engine
+from repro.core.range_fuser import fuse_ranges
+from repro.core.reorder import (RowTablePlan, coalesce, coalescing_factor,
+                                make_row_table_plan, sort_indices)
+
+__all__ = [
+    "isa", "reorder", "Engine", "bulk_gather", "bulk_scatter", "bulk_rmw",
+    "fuse_ranges", "compile_pattern", "Pattern", "Access", "Load", "BinOp",
+    "Compare", "RangeLoop", "Var", "LegalityError", "run_tiled",
+    "RowTablePlan", "coalesce", "coalescing_factor", "make_row_table_plan",
+    "sort_indices",
+]

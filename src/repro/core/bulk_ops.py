@@ -1,0 +1,186 @@
+"""High-level bulk access ops: the functional API models use directly.
+
+Each op applies the paper's pipeline — reorder (sort), coalesce (dedup),
+interleave (block-sequential DMA / sharded routing) — before touching memory:
+
+  bulk_gather       C[i] = A[B[i]]          (ILD)
+  bulk_scatter      A[B[i]] = C[i]          (IST; duplicate policy = last)
+  bulk_rmw          A[B[i]] op= C[i]        (IRMW; op in RMW_OPS)
+
+Tables may be 1-D (engine/scalar use) or 2-D row tables (embeddings, KV
+pages, expert buffers). 2-D paths can use the Pallas row-table kernels
+(`use_kernel=True`, default on TPU-shaped inputs); 1-D paths use fused XLA.
+All fall back to reference behaviour under ``optimize=False`` so every paper
+baseline is runnable.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import reorder
+from repro.core.isa import rmw_identity
+
+_SEG_OPS = {
+    "ADD": jax.ops.segment_sum,
+    "MAX": jax.ops.segment_max,
+    "MIN": jax.ops.segment_min,
+    "MUL": jax.ops.segment_prod,
+}
+
+
+def _maybe_kernel_gather(table, plan, *, interpret):
+    from repro.kernels.gather import ops as gops
+    return gops.row_table_gather(table, plan, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# gather
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("sort", "dedup", "use_kernel",
+                                   "block_rows", "lanes", "interpret"))
+def bulk_gather(table: jax.Array, idx: jax.Array, *, sort: bool = True,
+                dedup: bool = True, use_kernel: bool = False,
+                block_rows: int = 1024, lanes: int = 256,
+                interpret: bool = True) -> jax.Array:
+    """C = A[B] with reorder+coalesce. Works for (N,) or (N, D) tables.
+
+    use_kernel: route the packed fetch through the Pallas row-table kernel
+    (TPU target; interpret=True executes it on CPU for validation).
+    """
+    idx = idx.astype(jnp.int32)
+    flat_idx = idx.reshape(-1)
+    if not sort and not dedup:
+        out = table[flat_idx]
+        return out.reshape(idx.shape + table.shape[1:])
+
+    if dedup:
+        uniq, inv, _ = reorder.coalesce(flat_idx)
+        if use_kernel and table.ndim == 2:
+            plan = reorder.make_row_table_plan(
+                uniq, n_rows=table.shape[0], block_rows=block_rows,
+                lanes=lanes)
+            packed_tiles = _maybe_kernel_gather(table, plan,
+                                                interpret=interpret)
+            # packed_tiles: (num_tiles*lanes, D) in plan order; scatter into
+            # sorted-unique order via src_pos, then expand through inverse.
+            packed = jnp.zeros((uniq.shape[0],) + table.shape[1:],
+                               table.dtype)
+            dest = jnp.where(plan.valid, plan.src_pos,
+                             uniq.shape[0]).reshape(-1)
+            packed = packed.at[dest].set(packed_tiles, mode="drop",
+                                         unique_indices=True)
+            out = packed[inv]
+        else:
+            packed = table[uniq]          # sorted unique fetch ("scratchpad")
+            out = packed[inv]             # cores read packed data
+        return out.reshape(idx.shape + table.shape[1:])
+
+    # sort-only path (no dedup): fetch in sorted order, unsort.
+    sorted_idx, perm = reorder.sort_indices(flat_idx)
+    fetched = table[sorted_idx]
+    out = jnp.zeros_like(fetched).at[perm].set(fetched)
+    return out.reshape(idx.shape + table.shape[1:])
+
+
+# ---------------------------------------------------------------------------
+# scatter (IST): duplicate destinations resolved to the *last* write in
+# program order, matching sequential-loop semantics of A[B[i]] = C[i].
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("optimize",))
+def bulk_scatter(table: jax.Array, idx: jax.Array, values: jax.Array, *,
+                 cond: jax.Array | None = None,
+                 optimize: bool = True) -> jax.Array:
+    idx = idx.astype(jnp.int32).reshape(-1)
+    values = values.reshape((idx.shape[0],) + table.shape[1:])
+    if cond is not None:
+        cond = cond.reshape(-1)
+        # route masked lanes out of range; mode="drop" discards them.
+        idx = jnp.where(cond, idx, table.shape[0])
+    if not optimize:
+        return table.at[idx].set(values, mode="drop")
+    # reorder+coalesce: keep only the last write per destination. Sort by
+    # (idx, position) ascending, keep the final entry of each run — every
+    # surviving write has a unique destination => single-writer, no
+    # serialization (the paper's exclusive-write guarantee).
+    order = jnp.argsort(idx, stable=True)  # stable: program order kept in runs
+    sidx = idx[order]
+    last_of_run = jnp.concatenate(
+        [sidx[1:] != sidx[:-1], jnp.ones((1,), bool)])
+    dest = jnp.where(last_of_run, sidx, table.shape[0])  # drop non-last
+    return table.at[dest].set(values[order], mode="drop",
+                              unique_indices=True)
+
+
+# ---------------------------------------------------------------------------
+# RMW (IRMW): sort-by-destination -> segment-reduce -> unique scatter.
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("op", "optimize", "use_kernel",
+                                   "block_rows", "lanes", "interpret"))
+def bulk_rmw(table: jax.Array, idx: jax.Array, values: jax.Array, *,
+             op: str = "ADD", cond: jax.Array | None = None,
+             optimize: bool = True, use_kernel: bool = False,
+             block_rows: int = 1024, lanes: int = 256,
+             interpret: bool = True) -> jax.Array:
+    """A[B[i]] op= C[i]; op must be associative+commutative (RMW_OPS)."""
+    idx = idx.astype(jnp.int32).reshape(-1)
+    values = values.reshape((idx.shape[0],) + table.shape[1:])
+    ident = rmw_identity(op, table.dtype)
+    if cond is not None:
+        cond = cond.reshape(-1)
+        cshape = (-1,) + (1,) * (values.ndim - 1)
+        values = jnp.where(cond.reshape(cshape), values, ident)
+    if not optimize:
+        # naive baseline: XLA scatter with duplicate indices (serialized on
+        # real hardware; the paper's RMW-Atomic analogue).
+        if op == "ADD":
+            return table.at[idx].add(values)
+        if op == "MAX":
+            return table.at[idx].max(values)
+        if op == "MIN":
+            return table.at[idx].min(values)
+        if op == "MUL":
+            return table.at[idx].multiply(values)
+        raise ValueError(op)
+
+    # (1) reorder: sort by destination
+    sidx, perm = reorder.sort_indices(idx)
+    svals = values[perm]
+    # (2) coalesce: segment-reduce runs of equal destinations to one value
+    seg = jnp.cumsum(jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32),
+         (sidx[1:] != sidx[:-1]).astype(jnp.int32)]))
+    nseg = idx.shape[0]  # static bound
+    if op in _SEG_OPS:
+        packed = _SEG_OPS[op](svals, seg, num_segments=nseg)
+    else:  # AND / OR / XOR via bit-tricks over segments
+        raise NotImplementedError(f"segmented {op}")
+    # destination row of each segment (empty segments -> dtype-min -> routed
+    # out of range and dropped by the scatter).
+    seg_dest = jax.ops.segment_max(sidx, seg, num_segments=nseg)
+    seg_dest = jnp.where(seg_dest < 0, table.shape[0], seg_dest)
+
+    if use_kernel and table.ndim == 2:
+        from repro.kernels.scatter_rmw import ops as sops
+        return sops.row_table_rmw(table, seg_dest.astype(jnp.int32), packed,
+                                  op=op, block_rows=block_rows, lanes=lanes,
+                                  interpret=interpret)
+    # (3) unique scatter — every destination written exactly once.
+    if op == "ADD":
+        return table.at[seg_dest].add(packed, mode="drop",
+                                      unique_indices=True)
+    if op == "MAX":
+        return table.at[seg_dest].max(packed, mode="drop",
+                                      unique_indices=True)
+    if op == "MIN":
+        return table.at[seg_dest].min(packed, mode="drop",
+                                      unique_indices=True)
+    if op == "MUL":
+        return table.at[seg_dest].multiply(packed, mode="drop",
+                                           unique_indices=True)
+    raise ValueError(op)

@@ -1,0 +1,155 @@
+"""DX100 engine: executes an AccessProgram against memory regions.
+
+The paper's Controller dispatches instructions to four functional units with
+scoreboard hazard tracking; here the program is *traced once* into a single
+jitted XLA computation — dataflow replaces the scoreboard, async DMA replaces
+the fill/request/response pipeline, and the scratchpad is a dict of named
+tile arrays threaded through the trace.
+
+Usage:
+    eng = Engine(tile_size=16384)
+    out_env, spd = eng.run(program, env={"A": a, "B": b}, regs={"N": n})
+`env` holds the memory regions (the paper's main-memory arrays); regions
+written by IST/IRMW come back updated in `out_env`. `spd` is the final
+scratchpad (packed tiles the "cores" read back).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bulk_ops, isa, range_fuser
+
+
+class Engine:
+    def __init__(self, tile_size: int = 16384, *, optimize: bool = True,
+                 use_kernel: bool = False):
+        self.tile_size = int(tile_size)
+        self.optimize = optimize
+        self.use_kernel = use_kernel
+
+    # -- scalar operand resolution (register file) -------------------------
+    @staticmethod
+    def _reg(regs: Mapping, r):
+        if isinstance(r, str):
+            return regs[r]
+        return r
+
+    def _cond(self, spd, tc):
+        if tc is None:
+            return None
+        return spd[tc].astype(bool)
+
+    # -- instruction semantics ---------------------------------------------
+    def _exec(self, ins: isa.Instr, env: Dict, spd: Dict, regs: Mapping):
+        ts = self.tile_size
+        if isinstance(ins, isa.SLD):
+            # Note: lanes beyond the trip count (rs2) continue the stride
+            # progression (clipped reads) rather than being zeroed — their
+            # architectural content is undefined, and downstream guards
+            # (compiler-emitted `i < tile_end` masks) rely on the address
+            # progression staying monotone. Lanes failing TC read 0.
+            start = self._reg(regs, ins.rs1)
+            stride = self._reg(regs, ins.rs3)
+            base = env[ins.base]
+            i = jnp.arange(ts, dtype=jnp.int32)
+            addr = jnp.asarray(start, jnp.int32) + i * jnp.asarray(
+                stride, jnp.int32)
+            vals = base[jnp.clip(addr, 0, base.shape[0] - 1)]
+            vals = vals.astype(isa.DTYPES[ins.dtype])
+            cond = self._cond(spd, ins.tc)
+            if cond is not None:
+                vals = jnp.where(cond, vals, jnp.zeros_like(vals))
+            spd[ins.td] = vals
+        elif isinstance(ins, isa.SST):
+            start = jnp.asarray(self._reg(regs, ins.rs1), jnp.int32)
+            count = self._reg(regs, ins.rs2)
+            stride = jnp.asarray(self._reg(regs, ins.rs3), jnp.int32)
+            base = env[ins.base]
+            i = jnp.arange(ts, dtype=jnp.int32)
+            count = jnp.where(jnp.asarray(count) < 0, ts, count)
+            addr = start + i * stride
+            valid = i < count
+            cond = self._cond(spd, ins.tc)
+            if cond is not None:
+                valid = valid & cond
+            addr = jnp.where(valid, addr, base.shape[0])
+            env[ins.base] = base.at[addr].set(
+                spd[ins.ts].astype(base.dtype), mode="drop")
+        elif isinstance(ins, isa.ILD):
+            cond = self._cond(spd, ins.tc)
+            idx = spd[ins.ts1].astype(jnp.int32)
+            if cond is not None:
+                idx = jnp.where(cond, idx, 0)
+            out = bulk_ops.bulk_gather(
+                env[ins.base], idx,
+                sort=self.optimize, dedup=self.optimize,
+                use_kernel=self.use_kernel and env[ins.base].ndim == 2)
+            if cond is not None:
+                zshape = (-1,) + (1,) * (out.ndim - 1)
+                out = jnp.where(cond.reshape(zshape), out, 0)
+            spd[ins.td] = out.astype(isa.DTYPES[ins.dtype])
+        elif isinstance(ins, isa.IST):
+            env[ins.base] = bulk_ops.bulk_scatter(
+                env[ins.base], spd[ins.ts1].astype(jnp.int32),
+                spd[ins.ts2].astype(env[ins.base].dtype),
+                cond=self._cond(spd, ins.tc), optimize=self.optimize)
+        elif isinstance(ins, isa.IRMW):
+            env[ins.base] = bulk_ops.bulk_rmw(
+                env[ins.base], spd[ins.ts1].astype(jnp.int32),
+                spd[ins.ts2].astype(env[ins.base].dtype), op=ins.op,
+                cond=self._cond(spd, ins.tc), optimize=self.optimize,
+                use_kernel=self.use_kernel and env[ins.base].ndim == 2)
+        elif isinstance(ins, isa.ALUV):
+            a, b = spd[ins.ts1], spd[ins.ts2]
+            out = isa.alu_apply(ins.op, a, b)
+            cond = self._cond(spd, ins.tc)
+            if cond is not None:
+                out = jnp.where(cond, out, jnp.zeros_like(out))
+            spd[ins.td] = out.astype(isa.DTYPES[ins.dtype])
+        elif isinstance(ins, isa.ALUS):
+            a = spd[ins.ts]
+            b = jnp.asarray(self._reg(regs, ins.rs), a.dtype)
+            out = isa.alu_apply(ins.op, a, b)
+            cond = self._cond(spd, ins.tc)
+            if cond is not None:
+                out = jnp.where(cond, out, jnp.zeros_like(out))
+            spd[ins.td] = out.astype(isa.DTYPES[ins.dtype])
+        elif isinstance(ins, isa.RNG):
+            cap = self._reg(regs, ins.rs1)
+            cap = self.tile_size if (isinstance(cap, int) and cap < 0) \
+                else int(cap)
+            outer, inner, total = range_fuser.fuse_ranges(
+                spd[ins.ts1], spd[ins.ts2], capacity=cap,
+                cond=self._cond(spd, ins.tc))
+            spd[ins.td1] = outer
+            spd[ins.td2] = inner
+            spd["_rng_total"] = total
+            # validity mask of the fused stream (the hardware's finish bits):
+            # downstream stores/RMWs must be guarded by it.
+            spd[ins.td1 + "__mask"] = (
+                jnp.arange(outer.shape[0], dtype=jnp.int32) < total
+            ).astype(jnp.int32)
+        else:
+            raise TypeError(f"unknown instruction {ins!r}")
+
+    # -- program execution ---------------------------------------------------
+    def run(self, program: isa.AccessProgram, env: Mapping,
+            regs: Mapping | None = None, spd: Mapping | None = None):
+        """Trace/execute the program; returns (env, spd) after retirement."""
+        env = dict(env)
+        spd = dict(spd or {})
+        regs = dict(regs or {})
+        for ins in program.instrs:
+            self._exec(ins, env, spd, regs)
+        return env, spd
+
+    def jit_run(self, program: isa.AccessProgram):
+        """Compile a program into a reusable jitted callable."""
+        @partial(jax.jit)
+        def fn(env, regs, spd):
+            return self.run(program, env, regs, spd)
+        return fn

@@ -1,0 +1,56 @@
+"""Range Fuser unit (paper §3.4, Fig. 5).
+
+Flattens many short range loops — ``for i: for j in [lo[i], hi[i])`` — into
+one bulk (i, j) stream so the Indirect unit sees a full tile of future
+accesses. This is CSR row expansion: graph frontiers (GAP), UME zone->point
+ranges, and NAS CG row loops are all this shape (Table 1).
+
+JAX adaptation: static output capacity (the tile size) + a validity count,
+implemented with cumsum + searchsorted; fully jittable and differentiable-
+free (integer only).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnames=("capacity",))
+def fuse_ranges(lo: jax.Array, hi: jax.Array, *, capacity: int,
+                cond: jax.Array | None = None):
+    """Fuse range loops into bulk (outer_i, inner_j) streams.
+
+    Args:
+      lo, hi: (n,) integer range boundaries per outer iteration
+              (e.g. H[K[i]] and H[K[i]+1]).
+      capacity: static output tile capacity; entries beyond the true total
+                are invalid (replicated last element, masked by the count).
+      cond: optional (n,) bool condition tile (TC operand).
+
+    Returns:
+      (outer, inner, total): each (capacity,) int32, plus scalar total count.
+      For p < total:  outer[p] = i of the p-th fused iteration,
+                      inner[p] = j value.
+    """
+    lo = lo.astype(jnp.int32)
+    hi = hi.astype(jnp.int32)
+    lens = jnp.maximum(hi - lo, 0)
+    if cond is not None:
+        lens = jnp.where(cond, lens, 0)
+    offs = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                            jnp.cumsum(lens)]).astype(jnp.int32)  # (n+1,)
+    total = offs[-1]
+    p = jnp.arange(capacity, dtype=jnp.int32)
+    outer = jnp.searchsorted(offs, p, side="right").astype(jnp.int32) - 1
+    outer = jnp.clip(outer, 0, lo.shape[0] - 1)
+    inner = lo[outer] + (p - offs[outer])
+    valid = p < total
+    return (jnp.where(valid, outer, 0),
+            jnp.where(valid, inner, 0),
+            jnp.minimum(total, capacity))
+
+
+def fused_valid_mask(total: jax.Array, capacity: int) -> jax.Array:
+    return jnp.arange(capacity, dtype=jnp.int32) < total

@@ -1,0 +1,218 @@
+"""Reorder / coalesce / interleave — the paper's three bandwidth mechanisms.
+
+TPU adaptation (see DESIGN.md §2): a DRAM *row* becomes a contiguous block of
+table rows staged HBM->VMEM in one DMA; the Row Table becomes a run-length
+plan over sorted block ids that drives a Pallas ``BlockSpec.index_map`` via
+scalar prefetch; the Word Table becomes within-block offsets plus the inverse
+permutation; coalescing is sort-based dedup; interleaving is recovered by
+block-sequential DMA (stripes all HBM channels) and by sharding the index
+space across mesh axes.
+
+Everything here is static-shape jnp and fully jittable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# sorting & coalescing
+# ---------------------------------------------------------------------------
+
+def sort_indices(idx: jax.Array):
+    """Reorder stage: sort bulk indices ascending.
+
+    Returns (sorted_idx, perm) with ``sorted_idx = idx[perm]``. Sorting by
+    address groups same-block ("same DRAM row") accesses together, which is
+    the paper's Row-Table insertion order made explicit.
+    """
+    perm = jnp.argsort(idx)
+    return idx[perm], perm
+
+
+def coalesce(idx: jax.Array, *, size: int | None = None):
+    """Coalescing stage: deduplicate bulk indices (Word-Table linked list).
+
+    Returns ``(unique_idx, inverse, n_unique)`` where
+    ``unique_idx[inverse] == idx`` and ``unique_idx`` is sorted ascending and
+    padded (with its max value) to a static ``size`` (default: len(idx)).
+    """
+    size = int(size if size is not None else idx.shape[0])
+    # pad with the max so the padded array stays sorted (jnp.unique's default
+    # fill is the min, which would break the row-table plan's sort invariant)
+    unique_idx, inverse = jnp.unique(
+        idx, return_inverse=True, size=size, fill_value=jnp.max(idx))
+    n_unique = jnp.sum(
+        jnp.concatenate([jnp.ones((1,), jnp.int32),
+                         (unique_idx[1:] != unique_idx[:-1]).astype(jnp.int32)])
+    ) if size > 0 else jnp.zeros((), jnp.int32)
+    return unique_idx, inverse, n_unique
+
+
+def coalescing_factor(idx: jax.Array) -> jax.Array:
+    """#accesses / #unique accesses — the paper's coalescing metric."""
+    _, _, n_unique = coalesce(idx)
+    return idx.shape[0] / jnp.maximum(n_unique, 1)
+
+
+# ---------------------------------------------------------------------------
+# row-table plan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RowTablePlan:
+    """Row-Table analogue: a static-shape schedule of block-granular accesses.
+
+    Each of ``num_tiles`` plan tiles serves up to ``lanes`` words from ONE
+    table block (= one "DRAM row"). Padded lanes replicate the tile's first
+    valid entry (harmless for gathers; scatter callers neutralise them with
+    the RMW identity using ``valid``).
+
+    Fields (all jnp arrays unless noted):
+      tile_block   (num_tiles,) int32  block id served by each tile
+      tile_first   (num_tiles,) bool   True on a tile that *opens* its block
+      offsets      (num_tiles, lanes) int32  word offsets within the block
+      src_pos      (num_tiles, lanes) int32  position into the *sorted* index
+                                             stream each lane serves
+      valid        (num_tiles, lanes) bool
+      n_tiles      ()        int32    number of tiles actually used
+      block_rows   (static python int)
+      lanes        (static python int)
+      num_blocks   (static python int)
+    """
+    tile_block: jax.Array
+    tile_first: jax.Array
+    offsets: jax.Array
+    src_pos: jax.Array
+    valid: jax.Array
+    n_tiles: jax.Array
+    block_rows: int
+    lanes: int
+    num_blocks: int
+
+    @property
+    def num_tiles(self) -> int:
+        return int(self.tile_block.shape[0])
+
+
+def _ceil_div(a, b):
+    return (a + b - 1) // b
+
+
+@partial(jax.jit, static_argnames=("n_rows", "block_rows", "lanes"))
+def make_row_table_plan(sorted_idx: jax.Array, *, n_rows: int,
+                        block_rows: int, lanes: int) -> RowTablePlan:
+    """Build the Row-Table plan from *sorted* indices.
+
+    ``sorted_idx`` : (T,) int32 ascending row indices into a table with
+    ``n_rows`` rows, grouped into blocks of ``block_rows``. Duplicates are
+    allowed (coalesce first if you want them fused).
+
+    Static tile budget: ceil(T / lanes) + num_touched_blocks_max, where the
+    latter is bounded by min(num_blocks, T). Tiles beyond ``n_tiles`` have
+    ``valid == False`` and ``tile_block == 0`` (the kernel still DMAs block 0
+    for them; callers should size plans to keep this slack small).
+    """
+    T = sorted_idx.shape[0]
+    num_blocks = _ceil_div(n_rows, block_rows)
+    max_tiles = _ceil_div(T, lanes) + min(num_blocks, T)
+
+    blk = (sorted_idx // block_rows).astype(jnp.int32)
+    counts = jax.ops.segment_sum(
+        jnp.ones((T,), jnp.int32), blk, num_segments=num_blocks)
+    tiles_per_block = _ceil_div(counts, lanes)                    # (nb,)
+    tile_start = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(tiles_per_block)[:-1]])
+    n_tiles = jnp.sum(tiles_per_block)
+    pos_start = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])    # (nb,)
+
+    t = jnp.arange(max_tiles, dtype=jnp.int32)
+    # block owning tile t: last block with tile_start <= t (only for t < n_tiles)
+    owner = jnp.searchsorted(tile_start, t, side="right").astype(jnp.int32) - 1
+    # skip blocks with zero tiles: searchsorted over cumsum handles this since
+    # empty blocks have tile_start equal to their successor; side="right"
+    # lands on the last such block, whose count may be 0. Walk back via
+    # maximum over blocks with nonzero counts:
+    owner = jnp.clip(owner, 0, num_blocks - 1)
+    # for empty blocks counts==0 -> no tile maps to them because
+    # tiles_per_block==0 means tile_start[b] == tile_start[b+1]; side="right"
+    # then selects the next non-empty block correctly only if we re-derive:
+    k = t - tile_start[owner]                                     # tile # within block
+    lane = jnp.arange(lanes, dtype=jnp.int32)
+    pos = pos_start[owner][:, None] + k[:, None] * lanes + lane[None, :]
+    in_block = pos < (pos_start[owner] + counts[owner])[:, None]
+    tile_valid = (t < n_tiles)[:, None]
+    valid = in_block & tile_valid
+    pos_c = jnp.clip(pos, 0, T - 1)
+    offsets = (sorted_idx[pos_c] - owner[:, None] * block_rows).astype(jnp.int32)
+    offsets = jnp.clip(jnp.where(valid, offsets, 0), 0, block_rows - 1)
+    # Invalid trailing tiles point at the block of the last VALID tile so a
+    # kernel revisiting out blocks never opens (and garbage-writes) a fresh
+    # block for them; tile_first is then re-derived as a block-change flag,
+    # which equals (k == 0) on the valid prefix.
+    last_owner = owner[jnp.clip(n_tiles - 1, 0, max_tiles - 1)]
+    tile_block = jnp.where(t < n_tiles, owner, last_owner).astype(jnp.int32)
+    tile_first = jnp.concatenate(
+        [jnp.ones((1,), bool), tile_block[1:] != tile_block[:-1]])
+    return RowTablePlan(
+        tile_block=tile_block,
+        tile_first=tile_first,
+        offsets=offsets,
+        src_pos=jnp.where(valid, pos_c, 0).astype(jnp.int32),
+        valid=valid,
+        n_tiles=n_tiles.astype(jnp.int32),
+        block_rows=block_rows,
+        lanes=lanes,
+        num_blocks=num_blocks,
+    )
+
+
+jax.tree_util.register_dataclass(
+    RowTablePlan,
+    data_fields=["tile_block", "tile_first", "offsets", "src_pos", "valid",
+                 "n_tiles"],
+    meta_fields=["block_rows", "lanes", "num_blocks"],
+)
+
+
+# ---------------------------------------------------------------------------
+# interleaving helpers (benchmark + sharding utilities)
+# ---------------------------------------------------------------------------
+
+def channel_of(idx: jax.Array, *, block_rows: int, num_channels: int):
+    """Channel id under a block-cyclic layout (paper Fig 1a analogue)."""
+    return (idx // block_rows) % num_channels
+
+
+def interleave_round_robin(sorted_idx: jax.Array, *, block_rows: int,
+                           num_channels: int):
+    """Request-Generator analogue: emit sorted accesses round-robin across
+    channels. Used by the locality benchmark to measure how much ordering
+    (not data placement) contributes; on real TPU HBM this is subsumed by
+    block-sequential DMA, see DESIGN.md.
+    Returns a permutation of positions into sorted_idx.
+    """
+    ch = channel_of(sorted_idx, block_rows=block_rows,
+                    num_channels=num_channels)
+    # stable sort by (round, channel): round = per-channel running count
+    T = sorted_idx.shape[0]
+    ones = jnp.ones((T,), jnp.int32)
+    # running count of prior same-channel entries
+    eq = ch[:, None] == jnp.arange(num_channels)[None, :]
+    run = (jnp.cumsum(eq, axis=0) - 1)
+    rnd = jnp.take_along_axis(run, ch[:, None], axis=1)[:, 0]
+    key = rnd * num_channels + ch
+    return jnp.argsort(key)
+
+
+def shard_bulk_indices(idx: jax.Array, *, num_shards: int, n_rows: int):
+    """Address-range partitioning (§6.6 option 1): owner shard per index
+    under an equal row-range split. Returns (owner, local_idx)."""
+    rows_per = _ceil_div(n_rows, num_shards)
+    owner = (idx // rows_per).astype(jnp.int32)
+    return owner, (idx - owner * rows_per).astype(jnp.int32)

@@ -1,0 +1,2 @@
+from repro.data.batches import input_specs, make_batch  # noqa: F401
+from repro.data.pipeline import SyntheticTokenPipeline  # noqa: F401

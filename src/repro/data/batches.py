@@ -1,0 +1,80 @@
+"""Batch construction: concrete arrays (tests/benchmarks) and
+ShapeDtypeStruct stand-ins (dry-run lowering — no allocation).
+
+Per-family input trees (see DESIGN.md):
+  dense/moe/ssm : {"tokens", "labels"} (train) | {"tokens"} (serve)
+  vlm           : + "patch_embeds" (stubbed modality frontend): the text
+                  stream shrinks so text+patches == seq_len.
+  encdec        : {"src_embeds" (stub audio frames), "tokens", "labels"};
+                  seq_len splits half source / half target.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+VLM_PATCH_FRAC = 16   # 1/16 of the sequence are image patches
+
+
+def _token_shapes(cfg: ModelConfig, batch: int, seq: int, kind: str):
+    """Returns dict name -> (shape, dtype) for the given cell."""
+    emb_dt = cfg.activation_dtype
+    out = {}
+    if cfg.family == "encdec":
+        s_src = seq // 2
+        s_tgt = seq - s_src
+        out["src_embeds"] = ((batch, s_src, cfg.d_model), emb_dt)
+        out["tokens"] = ((batch, s_tgt), jnp.int32)
+        if kind == "train":
+            out["labels"] = ((batch, s_tgt), jnp.int32)
+        return out
+    if cfg.family == "vlm" and kind in ("train", "prefill"):
+        s_img = max(seq // VLM_PATCH_FRAC, 1)
+        s_txt = seq - s_img
+        out["patch_embeds"] = ((batch, s_img, cfg.d_model), emb_dt)
+        out["tokens"] = ((batch, s_txt), jnp.int32)
+        if kind == "train":
+            out["labels"] = ((batch, s_txt), jnp.int32)
+        return out
+    out["tokens"] = ((batch, seq), jnp.int32)
+    if kind == "train":
+        out["labels"] = ((batch, seq), jnp.int32)
+    return out
+
+
+def input_specs(cfg: ModelConfig, *, batch: int, seq: int,
+                kind: str = "train"):
+    """ShapeDtypeStruct tree for jit(...).lower(**specs) — no allocation.
+
+    For decode, `seq` is the CONTEXT length; tokens are (batch, 1) and the
+    KV cache (sized seq) is a separate argument produced by cache_specs().
+    """
+    if kind == "decode":
+        shapes = {"tokens": ((batch, 1), jnp.int32)}
+    else:
+        shapes = _token_shapes(cfg, batch, seq, kind)
+    return {k: jax.ShapeDtypeStruct(s, d) for k, (s, d) in shapes.items()}
+
+
+def make_batch(cfg: ModelConfig, *, batch: int, seq: int,
+               kind: str = "train", seed: int = 0):
+    """Concrete synthetic batch matching input_specs."""
+    rng = np.random.default_rng(seed)
+    if kind == "decode":
+        shapes = {"tokens": ((batch, 1), jnp.int32)}
+    else:
+        shapes = _token_shapes(cfg, batch, seq, kind)
+    out = {}
+    for k, (shape, dt) in shapes.items():
+        if dt == jnp.int32:
+            out[k] = jnp.asarray(
+                rng.integers(0, cfg.vocab, size=shape), jnp.int32)
+        else:
+            out[k] = jnp.asarray(
+                rng.normal(size=shape).astype(np.float32)).astype(dt)
+    return out

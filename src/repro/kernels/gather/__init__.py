@@ -1,0 +1,1 @@
+from repro.kernels.gather import ops, ref  # noqa: F401

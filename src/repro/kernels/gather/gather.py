@@ -1,0 +1,70 @@
+"""Row-table gather kernel (Indirect Access unit, paper §3.2) for TPU.
+
+Mapping (DESIGN.md §2): each grid step serves one plan tile — up to ``lanes``
+words from ONE table block. The scalar-prefetched ``tile_block`` array *is*
+the Row Table: it drives ``BlockSpec.index_map`` so Mosaic issues one
+HBM->VMEM DMA per opened block ("row activate"), and — because Pallas keeps a
+block resident while consecutive grid steps map to the same index — all
+subsequent tiles of that block are served from VMEM ("row-buffer hits").
+Word offsets (the Word Table) index within the open block.
+
+VMEM budget per step: block_rows*D + lanes*D + lanes words (double-buffered
+by the pipeline). Choose block_rows*D*dtype <= ~4MB. MXU alignment: D should
+be a multiple of 128, lanes a multiple of 8 (sublane), block_rows a multiple
+of 8.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(tile_block_ref, offs_ref, table_ref, out_ref, *,
+                   lanes: int):
+    """One grid step: serve `lanes` words from the open block."""
+    def body(l, _):
+        off = offs_ref[0, l]
+        row = pl.load(table_ref, (pl.dslice(off, 1), slice(None)))
+        pl.store(out_ref, (pl.dslice(l, 1), slice(None)), row)
+        return _
+    jax.lax.fori_loop(0, lanes, body, None)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "lanes",
+                                             "interpret"))
+def row_table_gather(table: jax.Array, tile_block: jax.Array,
+                     offsets: jax.Array, *, block_rows: int, lanes: int,
+                     interpret: bool = True) -> jax.Array:
+    """Gather planned by a row table.
+
+    Args:
+      table:      (N, D) — N % block_rows == 0 after padding by the wrapper.
+      tile_block: (num_tiles,) int32 block id per plan tile (scalar prefetch).
+      offsets:    (num_tiles, lanes) int32 word offsets within the block.
+    Returns:
+      (num_tiles * lanes, D) packed rows in plan order.
+    """
+    num_tiles = tile_block.shape[0]
+    n, d = table.shape
+    assert n % block_rows == 0, (n, block_rows)
+    assert offsets.shape == (num_tiles, lanes)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(num_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, lanes), lambda i, blk: (i, 0)),
+            pl.BlockSpec((block_rows, d), lambda i, blk: (blk[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((lanes, d), lambda i, blk: (i, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_gather_kernel, lanes=lanes),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_tiles * lanes, d), table.dtype),
+        interpret=interpret,
+    )(tile_block, offsets, table)

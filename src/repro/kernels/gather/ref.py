@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the row-table gather kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def row_table_gather_ref(table: jax.Array, tile_block: jax.Array,
+                         offsets: jax.Array, *, block_rows: int,
+                         lanes: int) -> jax.Array:
+    """out[t*lanes + l] = table[tile_block[t]*block_rows + offsets[t, l]].
+
+    Matches the kernel bit-exactly including padded lanes (which read offset
+    0 of the tile's block)."""
+    num_tiles = tile_block.shape[0]
+    rows = tile_block[:, None] * block_rows + offsets      # (num_tiles, lanes)
+    return table[rows.reshape(-1)].reshape(
+        (num_tiles * lanes,) + table.shape[1:])

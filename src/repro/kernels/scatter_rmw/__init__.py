@@ -1,0 +1,1 @@
+from repro.kernels.scatter_rmw import ops, ref  # noqa: F401

@@ -1,0 +1,44 @@
+"""Jitted wrapper: coalesced (sorted-unique) RMW -> row-table kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.isa import rmw_identity
+from repro.core.reorder import make_row_table_plan
+from repro.kernels.scatter_rmw import ref as _ref
+from repro.kernels.scatter_rmw import scatter_rmw as _k
+
+
+@partial(jax.jit, static_argnames=("op", "block_rows", "lanes", "interpret",
+                                   "use_ref"))
+def row_table_rmw(table: jax.Array, dest: jax.Array, vals: jax.Array, *,
+                  op: str = "ADD", block_rows: int = 512, lanes: int = 128,
+                  interpret: bool = True, use_ref: bool = False) -> jax.Array:
+    """table[dest[u]] op= vals[u] for unique, *sorted* dest.
+
+    Entries with dest >= table.shape[0] (padding/empty-segment markers) are
+    neutralised with the RMW identity. Returns the updated table.
+    """
+    n = table.shape[0]
+    ident = rmw_identity(op, table.dtype)
+    ok = dest < n
+    vals = jnp.where(ok.reshape((-1,) + (1,) * (vals.ndim - 1)), vals, ident)
+    dest_c = jnp.where(ok, dest, n - 1)  # stays sorted: pads were > all valid
+
+    n_pad = -(-n // block_rows) * block_rows
+    padded = jnp.pad(table, ((0, n_pad - n),) + ((0, 0),) * (table.ndim - 1))
+    plan = make_row_table_plan(dest_c, n_rows=n_pad, block_rows=block_rows,
+                               lanes=lanes)
+    # vals in plan order; invalid lanes -> identity
+    v_planned = vals[plan.src_pos.reshape(-1)]
+    v_planned = jnp.where(
+        plan.valid.reshape((-1,) + (1,) * (vals.ndim - 1)), v_planned, ident)
+    fn = _ref.row_table_rmw_ref if use_ref else partial(
+        _k.row_table_rmw, interpret=interpret)
+    out = fn(padded, plan.tile_block, plan.tile_first.astype(jnp.int32),
+             plan.offsets, v_planned, block_rows=block_rows, lanes=lanes,
+             op=op)
+    return out[:n]

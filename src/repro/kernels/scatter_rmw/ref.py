@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the row-table scatter-RMW kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.isa import alu_apply
+
+
+def row_table_rmw_ref(table: jax.Array, tile_block: jax.Array,
+                      tile_first: jax.Array, offsets: jax.Array,
+                      vals: jax.Array, *, block_rows: int, lanes: int,
+                      op: str = "ADD") -> jax.Array:
+    """Sequential semantics of the kernel (duplicate offsets across tiles of
+    the same block accumulate, matching the in-VMEM RMW)."""
+    num_tiles = tile_block.shape[0]
+    rows = (tile_block[:, None] * block_rows + offsets).reshape(-1)
+    v = vals.reshape((num_tiles * lanes,) + table.shape[1:])
+    if op == "ADD":
+        return table.at[rows].add(v)
+    if op == "MAX":
+        return table.at[rows].max(v)
+    if op == "MIN":
+        return table.at[rows].min(v)
+    if op == "MUL":
+        return table.at[rows].multiply(v)
+    raise ValueError(op)

@@ -1,0 +1,254 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# This module is the ONLY place the 512 placeholder devices exist; smoke
+# tests and benchmarks see the real single CPU device.
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) cell on the
+production meshes and extract memory / cost / collective statistics.
+
+  single-pod mesh : (16, 16)     -> ("data", "model")        256 chips
+  multi-pod mesh  : (2, 16, 16)  -> ("pod", "data", "model") 512 chips
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh single,multi [--force] [--out results/dryrun]
+
+Each cell writes results/dryrun/<mesh>/<arch>__<shape>.json (incremental:
+existing cells are skipped unless --force), containing memory_analysis,
+cost_analysis FLOPs/bytes, per-kind collective bytes, and roofline terms.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, applicable_shapes, get_config
+from repro.configs.base import ARCH_IDS
+from repro.data.batches import input_specs
+from repro.launch import mesh as meshlib
+from repro.models import build_model
+from repro.optim import adamw_init
+from repro.roofline import analysis as roofline
+from repro.train.trainer import make_train_step
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    return meshlib.make_production_mesh(multi_pod=multi_pod)
+
+
+def _named(mesh, tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _cache_struct(model, cfg, shape):
+    """eval_shape the cache for decode/prefill cells."""
+    b = shape.global_batch
+    seq = shape.seq_len
+    kw = {}
+    if cfg.family == "encdec":
+        kw["src_len"] = seq // 2
+        max_len = seq - seq // 2
+    elif cfg.sliding_window is not None and shape.name == "long_500k":
+        max_len = cfg.sliding_window      # ring cache == window
+    else:
+        max_len = seq
+    return jax.eval_shape(lambda: model.init_cache(b, max_len, **kw))
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, donate: bool = True,
+               unroll: bool = False, cfg_overrides: dict | None = None):
+    """Build + lower one (arch, shape) cell. Returns (lowered, meta)."""
+    cfg = get_config(arch)
+    if unroll:
+        cfg = dataclasses.replace(cfg, scan_unroll=True)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    model = build_model(cfg)
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    n_params = roofline.count_params(params_shape)
+    meta = {"arch": arch, "shape": shape_name, "n_params": n_params,
+            "mesh": list(mesh.devices.shape), "kind": shape.kind}
+
+    pspecs = meshlib.param_specs(params_shape, mesh)
+    psh = _named(mesh, pspecs)
+
+    if shape.kind == "train":
+        opt_shape = jax.eval_shape(adamw_init, params_shape)
+        zspecs = meshlib.zero1_specs(pspecs, params_shape, mesh)
+        osh = {"mu": _named(mesh, zspecs), "nu": _named(mesh, zspecs),
+               "step": NamedSharding(mesh, P())}
+        batch = input_specs(cfg, batch=shape.global_batch,
+                            seq=shape.seq_len, kind="train")
+        bsh = _named(mesh, meshlib.batch_specs(batch, mesh))
+        step = make_train_step(model)
+        jitted = jax.jit(step, in_shardings=(psh, osh, bsh),
+                         out_shardings=(psh, osh, None),
+                         donate_argnums=(0, 1) if donate else ())
+        lowered = jitted.lower(params_shape, opt_shape, batch)
+        return lowered, meta
+
+    if shape.kind == "prefill":
+        batch = input_specs(cfg, batch=shape.global_batch,
+                            seq=shape.seq_len, kind="prefill")
+        cache = _cache_struct(model, cfg, shape)
+        csh = _named(mesh, meshlib.cache_specs(cache, mesh,
+                                               shape.global_batch))
+        bsh = _named(mesh, meshlib.batch_specs(batch, mesh))
+        jitted = jax.jit(model.prefill, in_shardings=(psh, bsh, csh),
+                         donate_argnums=(2,) if donate else ())
+        lowered = jitted.lower(params_shape, batch, cache)
+        return lowered, meta
+
+    # decode: one new token against a seq_len-deep cache
+    batch = input_specs(cfg, batch=shape.global_batch, seq=shape.seq_len,
+                        kind="decode")
+    cache = _cache_struct(model, cfg, shape)
+    seq_shard = shape.name == "long_500k"
+    csh = _named(mesh, meshlib.cache_specs(
+        cache, mesh, shape.global_batch, seq_shard=seq_shard,
+        seq_len=shape.seq_len))
+    bsh = _named(mesh, meshlib.batch_specs(batch, mesh))
+    jitted = jax.jit(model.decode_step, in_shardings=(psh, bsh, csh),
+                     donate_argnums=(2,) if donate else ())
+    lowered = jitted.lower(params_shape, batch, cache)
+    return lowered, meta
+
+
+def _memory_dict(compiled):
+    ma = compiled.memory_analysis()
+    if ma is None:
+        return {}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        v = getattr(ma, attr, None)
+        if v is not None:
+            out[attr] = int(v)
+    if not out:
+        out["repr"] = str(ma)
+    return out
+
+
+def _parse_overrides(sets):
+    out = {}
+    for kv in sets or []:
+        k, v = kv.split("=", 1)
+        if v in ("true", "false"):
+            v = v == "true"
+        elif v.isdigit():
+            v = int(v)
+        out[k] = v
+    return out
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_label: str,
+             out_dir: str, force: bool = False, unroll: bool = False,
+             overrides: dict | None = None):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape not in applicable_shapes(cfg):
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_label,
+                "status": "skipped",
+                "reason": "long_500k needs sub-quadratic attention "
+                          "(DESIGN.md §Arch-applicability)"}
+    path = os.path.join(out_dir, mesh_label, f"{arch}__{shape_name}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    t0 = time.time()
+    try:
+        # `set_mesh` provides the ambient mesh: required by the shard_map
+        # fast paths (MoE EP) and the spec's `with mesh:` contract.
+        with jax.sharding.set_mesh(mesh):
+            lowered, meta = lower_cell(arch, shape_name, mesh,
+                                       unroll=unroll,
+                                       cfg_overrides=overrides)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        chips = int(mesh.devices.size)
+        n_active = int(meta["n_params"]
+                       * roofline.active_param_fraction(cfg))
+        mflops = roofline.model_flops(
+            cfg, batch=shape.global_batch, seq=shape.seq_len,
+            kind=shape.kind, n_params=meta["n_params"],
+            n_active_params=n_active)
+        rep = roofline.analyze_compiled(compiled, chips=chips,
+                                        model_flops_total=mflops)
+        result = {
+            **meta, "mesh_label": mesh_label, "status": "ok",
+            "chips": chips, "n_active_params": n_active,
+            "memory_analysis": _memory_dict(compiled),
+            "roofline": rep.to_dict(),
+            "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        }
+        print(compiled.memory_analysis())
+    except Exception as e:  # noqa: BLE001 — record failures as data
+        result = {"arch": arch, "shape": shape_name, "mesh": mesh_label,
+                  "status": "error", "error": f"{type(e).__name__}: {e}",
+                  "trace": traceback.format_exc()[-2000:]}
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single,multi")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--unroll", action="store_true",
+                    help="unroll layer scans for exact cost accounting")
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg override key=value (e.g. opt_attention=true)")
+    args = ap.parse_args()
+    overrides = _parse_overrides(args.set)
+
+    archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = args.mesh.split(",")
+
+    rows = []
+    for mesh_label in meshes:
+        mesh = make_production_mesh(multi_pod=(mesh_label == "multi"))
+        for arch in archs:
+            for shape_name in shapes:
+                r = run_cell(arch, shape_name, mesh, mesh_label, args.out,
+                             force=args.force, unroll=args.unroll,
+                             overrides=overrides)
+                status = r["status"]
+                extra = ""
+                if status == "ok":
+                    rf = r["roofline"]
+                    extra = (f"dom={rf['dominant']} "
+                             f"c={rf['compute_s']:.2e}s "
+                             f"m={rf['memory_s']:.2e}s "
+                             f"n={rf['collective_s']:.2e}s "
+                             f"compile={r['compile_s']}s")
+                elif status == "error":
+                    extra = r["error"][:120]
+                print(f"[{mesh_label}] {arch} x {shape_name}: "
+                      f"{status} {extra}", flush=True)
+                rows.append(r)
+    ok = sum(1 for r in rows if r["status"] == "ok")
+    sk = sum(1 for r in rows if r["status"] == "skipped")
+    er = sum(1 for r in rows if r["status"] == "error")
+    print(f"\ndry-run complete: {ok} ok, {sk} skipped, {er} errors")
+    return 0 if er == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,182 @@
+"""Production mesh + sharding rules.
+
+Mesh axes: (pod, data, model).
+  data  : DP batch axis (+ ZeRO-1 optimizer-state sharding)
+  model : TP for dense kernels, EP(xTP) for experts, vocab axis for the
+          embedding table (= the paper's §6.6 address-range partitioning),
+          SP for long-context KV caches
+  pod   : second DP axis across ICI/DCN pods (gradient all-reduce crosses
+          it once per step; int8 compression available, optim/compress.py)
+
+Never build a mesh at import time — jax locks the device count on first use.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (CPU) devices exist — tests/examples."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def batch_axes(mesh: Mesh):
+    """The composite DP axis: ('pod','data') on multi-pod meshes."""
+    return (("pod", "data") if "pod" in mesh.axis_names else ("data",))
+
+
+# ---------------------------------------------------------------------------
+# parameter sharding rules
+# ---------------------------------------------------------------------------
+# Keyed by leaf name; the spec applies to the RIGHTMOST dims and is padded
+# left with None, so the same rule covers plain and scan-stacked params
+# ((L, ...) or (blocks, slots, ...)).
+
+_RULES = {
+    # embedding: vocab axis sharded over `model` — DX100 address-range
+    # partitioning of the indirect table (§6.6 option 1)
+    "embed": ("model", None),
+    # attention
+    "wq": (None, "model"), "wk": (None, "model"), "wv": (None, "model"),
+    "wo": ("model", None),
+    # mlp
+    "w_gate": (None, "model"), "w_up": (None, "model"),
+    "w_down": ("model", None),
+    # moe (expert dim over `model`: EP; grok pads 8e -> axis via inner TP)
+    "router": (None, None),
+    # mamba
+    "in_proj": (None, "model"), "conv_w": (None, "model"),
+    "x_proj": ("model", None), "dt_proj": (None, "model"),
+    "A_log": ("model", None), "D": ("model",), "out_proj": ("model", None),
+    # rwkv
+    "wr": (None, "model"), "w_dd": (None, "model"), "u": ("model", None),
+    "w_base": (None,), "mix_r": (None,), "mix_k": (None,), "mix_v": (None,),
+    "mix_w": (None,),
+}
+
+_MOE_RULES = {  # (E, D, F) / (E, F, D): experts over `model`
+    "w_gate": ("model", None, None), "w_up": ("model", None, None),
+    "w_down": ("model", None, None),
+}
+
+
+def _spec_for(path, leaf) -> P:
+    names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    leafname = names[-1]
+    in_moe = "moe" in names
+    rule = None
+    if in_moe and leafname in _MOE_RULES:
+        rule = _MOE_RULES[leafname]
+    elif leafname in _RULES:
+        rule = _RULES[leafname]
+    if rule is None:
+        return P()           # norms, scalars: replicated
+    if len(rule) > leaf.ndim:
+        return P()
+    pad = (None,) * (leaf.ndim - len(rule))
+    return P(*(pad + tuple(rule)))
+
+
+def param_specs(params, mesh: Mesh):
+    """PartitionSpec tree for a param pytree (divisibility-checked)."""
+    axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def fix(path, leaf):
+        spec = _spec_for(path, leaf)
+        fixed = []
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * leaf.ndim):
+            if ax is not None and dim % axis_size.get(ax, 1) != 0:
+                ax = None    # replicate non-divisible dims
+            fixed.append(ax)
+        return P(*fixed[:leaf.ndim])
+
+    return jax.tree_util.tree_map_with_path(fix, params)
+
+
+def param_shardings(params, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), param_specs(params, mesh),
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def zero1_specs(pspecs, params, mesh: Mesh):
+    """Optimizer-moment specs: param spec + ZeRO-1 sharding over `data` on
+    the largest still-unsharded, divisible dim."""
+    data_ax = "data"
+    axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dsize = axis_size.get(data_ax, 1)
+
+    def add_data(spec, leaf):
+        spec = tuple(spec) + (None,) * (leaf.ndim - len(tuple(spec)))
+        best, best_dim = None, 0
+        for i, (dim, ax) in enumerate(zip(leaf.shape, spec)):
+            if ax is None and dim % dsize == 0 and dim > best_dim:
+                best, best_dim = i, dim
+        if best is None:
+            return P(*spec)
+        out = list(spec)
+        out[best] = data_ax
+        return P(*out)
+
+    return jax.tree_util.tree_map(
+        add_data, pspecs, params, is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_specs(batch_tree, mesh: Mesh):
+    """Shard every input's leading (batch) dim over the DP axes (replicate
+    when the batch doesn't divide, e.g. long_500k's global_batch=1)."""
+    axes = batch_axes(mesh)
+    ax = axes if len(axes) > 1 else axes[0]
+    axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = 1
+    for a in axes:
+        dp *= axis_size[a]
+
+    def spec(leaf):
+        if leaf.shape and leaf.shape[0] % dp == 0:
+            return P(ax, *([None] * (leaf.ndim - 1)))
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map(spec, batch_tree)
+
+
+def cache_specs(cache_tree, mesh: Mesh, batch: int, *,
+                seq_shard: bool = False, seq_len: int = 0):
+    """KV-cache sharding: the batch dim (located by size) over DP axes;
+    optionally the sequence dim over `model` (SP for long-context decode —
+    KV layouts are (L, B, S, K, hd))."""
+    axes = batch_axes(mesh)
+    ax = axes if len(axes) > 1 else axes[0]
+    axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = 1
+    for a in batch_axes(mesh):
+        dp *= axis_size[a]
+
+    def spec(leaf):
+        s = [None] * leaf.ndim
+        bidx = None
+        for i, dim in enumerate(leaf.shape):
+            if dim == batch:
+                bidx = i
+                break
+        if bidx is not None and batch % dp == 0:
+            s[bidx] = ax
+        if seq_shard and seq_len and bidx is not None:
+            for j in range(bidx + 1, leaf.ndim):
+                if leaf.shape[j] == seq_len and \
+                        seq_len % axis_size.get("model", 1) == 0:
+                    s[j] = "model"
+                    break
+        return P(*s)
+
+    return jax.tree_util.tree_map(spec, cache_tree)

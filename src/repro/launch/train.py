@@ -1,0 +1,88 @@
+"""End-to-end training driver with checkpoint/restart.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+      --steps 50 --batch 8 --seq 128 [--reduced] [--ckpt-dir ckpts] \
+      [--ckpt-every 20] [--resume] [--data-shards 1 --shard 0]
+
+On this CPU container use --reduced (smoke-scale config). On a real pod the
+same driver runs the full config under make_production_mesh() with the
+sharded step from train/trainer.py.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.pipeline import SyntheticTokenPipeline
+from repro.models import build_model
+from repro.optim import adamw_init
+from repro.train import checkpoint as ckpt
+from repro.train.trainer import Trainer
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale config (CPU-runnable)")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--data-shards", type=int, default=1)
+    ap.add_argument("--shard", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    trainer = Trainer(model=model, mesh=None, peak_lr=args.lr,
+                      warmup=max(args.steps // 10, 1),
+                      total_steps=args.steps)
+    params, opt = trainer.init_state(args.seed)
+    start_step = 0
+
+    if args.ckpt_dir and args.resume:
+        last = ckpt.latest_step(args.ckpt_dir)
+        if last is not None:
+            state, extra, start_step = ckpt.load_checkpoint(
+                args.ckpt_dir, {"params": params, "opt": opt})
+            params, opt = state["params"], state["opt"]
+            print(f"resumed from step {start_step}")
+
+    pipe = SyntheticTokenPipeline(cfg, args.batch, args.seq,
+                                  seed=args.seed,
+                                  num_shards=args.data_shards,
+                                  shard=args.shard)
+    step_fn = trainer.jitted_step()
+
+    t0 = time.time()
+    for step in range(start_step, args.steps):
+        batch = pipe.get_batch(step)
+        params, opt, metrics = step_fn(params, opt, batch)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            loss = float(metrics["loss"])
+            print(f"step {step:5d}  loss {loss:.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):.3f}  "
+                  f"lr {float(metrics['lr']):.2e}  "
+                  f"({time.time() - t0:.1f}s)", flush=True)
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            path = ckpt.save_checkpoint(
+                args.ckpt_dir, step + 1, {"params": params, "opt": opt},
+                extra=pipe.cursor_state(step + 1))
+            print(f"checkpoint -> {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,59 @@
+"""DX100-backed embedding: the paper's Gather (fwd) / RMW (bwd) pair as a
+first-class model component.
+
+Forward  = ILD   : bulk gather from the vocab table (optionally through the
+                   reorder+coalesce engine — duplicate tokens in a batch are
+                   fetched once).
+Backward = IRMW  : the vocab-gradient scatter-add. XLA's native lowering of
+                   duplicate-index scatter serializes updates; the engine
+                   path (sort by token -> segment-sum -> unique scatter) is
+                   the TPU-native single-writer RMW of paper §2.2/§3.2.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bulk_ops
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def embed_lookup(table: jax.Array, tokens: jax.Array,
+                 dx100_fwd: bool = False, dx100_bwd: bool = True
+                 ) -> jax.Array:
+    """table: (V, D); tokens: int32 (...); returns (..., D)."""
+    if dx100_fwd:
+        return bulk_ops.bulk_gather(table, tokens)
+    return table[tokens]
+
+
+def _fwd(table, tokens, dx100_fwd, dx100_bwd):
+    return embed_lookup(table, tokens, dx100_fwd, dx100_bwd), (tokens,
+                                                               table.shape)
+
+
+def _bwd(dx100_fwd, dx100_bwd, res, g):
+    tokens, tshape = res
+    flat_tok = tokens.reshape(-1)
+    flat_g = g.reshape(-1, tshape[-1])
+    zeros = jnp.zeros(tshape, flat_g.dtype)
+    if dx100_bwd:
+        grad = bulk_ops.bulk_rmw(zeros, flat_tok, flat_g, op="ADD")
+    else:
+        grad = zeros.at[flat_tok].add(flat_g)
+    return (grad.astype(g.dtype), None)
+
+
+embed_lookup.defvjp(_fwd, _bwd)
+
+
+def init_embedding(key, vocab: int, d_model: int, dtype=jnp.float32):
+    # 0.02 stddev: keeps tied-head logits O(1) at init
+    return jax.nn.initializers.normal(0.02)(key, (vocab, d_model), dtype)
+
+
+def logits_out(table: jax.Array, x: jax.Array) -> jax.Array:
+    """Tied output head: (..., D) @ (V, D)^T -> (..., V)."""
+    return x @ table.T

@@ -1,0 +1,201 @@
+"""Jamba-style hybrid: superblocks of `attn_period` layers — one GQA
+attention layer + (attn_period-1) Mamba layers — with MoE FFNs every
+`moe_period` layers (Jamba 1.5: period 8, attn at index 4, MoE every 2).
+
+Scan runs over superblocks (9 for 72 layers), so the HLO stays small while
+layer heterogeneity stays explicit inside the block body.
+
+Serve state per superblock: one KV cache (attention layer) + per-mamba-layer
+(conv, ssm) states => O(1) memory in context length except the single
+attention cache — this is what makes jamba long_500k-runnable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.remat import wrap_scan_body
+from repro.models import embedding as emb
+from repro.models import layers as L
+from repro.models import mamba as S
+from repro.models import moe as M
+
+
+def _attn_index(cfg: ModelConfig) -> int:
+    return cfg.attn_period // 2          # jamba places attn mid-block
+
+
+def init_superblock(key, cfg: ModelConfig):
+    n = cfg.attn_period
+    ai = _attn_index(cfg)
+    keys = jax.random.split(key, 2 * n + 1)
+    p = {"ln1": jnp.ones((n, cfg.d_model), jnp.float32),
+         "ln2": jnp.ones((n, cfg.d_model), jnp.float32)}
+    p["attn"] = L.init_attention(keys[0], cfg.d_model, cfg.n_heads,
+                                 cfg.n_kv_heads, cfg.head_dim,
+                                 dtype=cfg.weight_dtype)
+    mamba_keys = [keys[1 + i] for i in range(n) if i != ai]
+    p["mamba"] = jax.vmap(lambda k: S.init_mamba(
+        k, cfg.d_model, expand=cfg.ssm_expand, d_state=cfg.ssm_state,
+        d_conv=cfg.ssm_conv, dt_rank=cfg.dt_rank, dtype=cfg.weight_dtype))(
+            jnp.stack(mamba_keys))
+    # FFN slots: MoE on odd layer indices, dense MLP on even (Jamba: every
+    # moe_period-th layer is MoE)
+    moe_slots = [i for i in range(n) if (i % cfg.moe_period)
+                 == cfg.moe_period - 1]
+    mlp_slots = [i for i in range(n) if i not in moe_slots]
+    p["moe"] = jax.vmap(lambda k: M.init_moe(
+        k, cfg.d_model, cfg.d_ff, cfg.n_experts, dtype=cfg.weight_dtype))(
+            jnp.stack([keys[1 + n + i] for i in moe_slots]))
+    p["mlp"] = jax.vmap(lambda k: L.init_mlp(
+        k, cfg.d_model, cfg.d_ff, dtype=cfg.weight_dtype))(
+            jnp.stack([keys[1 + n + i] for i in mlp_slots]))
+    return p
+
+
+def init_hybrid_lm(key, cfg: ModelConfig):
+    assert cfg.n_layers % cfg.attn_period == 0
+    nsb = cfg.n_layers // cfg.attn_period
+    ke, kl = jax.random.split(key)
+    sb_keys = jax.random.split(kl, nsb)
+    blocks = jax.vmap(lambda k: init_superblock(k, cfg))(sb_keys)
+    return {
+        "embed": emb.init_embedding(ke, cfg.vocab, cfg.d_model,
+                                    dtype=cfg.weight_dtype),
+        "blocks": blocks,
+        "final_norm": L.init_rms_norm(cfg.d_model),
+    }
+
+
+def _ffn(p, x, slot_moe, slot_mlp, use_moe, cfg):
+    if use_moe:
+        lp = jax.tree_util.tree_map(lambda a: a[slot_moe], p["moe"])
+        out, logits = M.moe_ffn_auto(lp, x, n_experts=cfg.n_experts,
+                                     top_k=cfg.top_k,
+                                     capacity_factor=cfg.capacity_factor,
+                                     use_ep=cfg.moe_a2a)
+        return out, M.moe_aux_loss(logits, cfg.n_experts, cfg.top_k)
+    lp = jax.tree_util.tree_map(lambda a: a[slot_mlp], p["mlp"])
+    return L.mlp(lp, x), jnp.zeros((), jnp.float32)
+
+
+def _superblock(p, x, *, cfg: ModelConfig, positions, cache=None,
+                cache_len=None, mamba_state=None,
+                return_mamba_state: bool = False):
+    """One superblock forward. Returns (x, new_cache, new_mamba_state, aux)."""
+    n, ai = cfg.attn_period, _attn_index(cfg)
+    aux = jnp.zeros((), jnp.float32)
+    mi = 0          # mamba slot
+    fi_moe = fi_mlp = 0
+    new_cache, new_mstate = None, []
+    for i in range(n):
+        h = L.rms_norm(x, p["ln1"][i])
+        if i == ai:
+            r = L.attention(p["attn"], h, n_heads=cfg.n_heads,
+                            n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                            positions=positions, theta=cfg.rope_theta,
+                            cache=cache, cache_len=cache_len,
+                            packed_gqa=cfg.opt_attention)
+            if cache is not None:
+                r, new_cache = r
+        else:
+            lp = jax.tree_util.tree_map(lambda a: a[mi], p["mamba"])
+            if mamba_state is not None:
+                r, st = S.mamba_step(lp, mamba_state[mi], h)
+                new_mstate.append(st)
+            elif return_mamba_state:
+                r, st = S.mamba_forward(lp, h, return_state=True)
+                new_mstate.append(st)
+            else:
+                r = S.mamba_forward(lp, h)
+            mi += 1
+        x = x + r
+        h = L.rms_norm(x, p["ln2"][i])
+        use_moe = (i % cfg.moe_period) == cfg.moe_period - 1
+        f, a = _ffn(p, h, fi_moe, fi_mlp, use_moe, cfg)
+        if use_moe:
+            fi_moe += 1
+        else:
+            fi_mlp += 1
+        x = x + f
+        aux = aux + a
+    return x, new_cache, new_mstate, aux
+
+
+def hybrid_forward(params, batch: dict, cfg: ModelConfig):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = emb.embed_lookup(params["embed"], tokens, cfg.dx100_embed_fwd,
+                         cfg.dx100_embed_bwd).astype(cfg.activation_dtype)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(carry, bp):
+        x, aux = carry
+        x, _, _, a = _superblock(bp, x, cfg=cfg, positions=positions)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(wrap_scan_body(body, cfg),
+                               (x, jnp.zeros((), jnp.float32)),
+                               params["blocks"], unroll=cfg.layer_unroll)
+    x = L.rms_norm(x, params["final_norm"])
+    return emb.logits_out(params["embed"], x), aux / max(cfg.n_layers, 1)
+
+
+# --- serving ----------------------------------------------------------------
+
+def hybrid_init_cache(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=None):
+    dtype = dtype or cfg.activation_dtype
+    nsb = cfg.n_layers // cfg.attn_period
+    nmamba = cfg.attn_period - 1
+    d_inner = cfg.ssm_expand * cfg.d_model
+    kshape = (nsb, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(kshape, dtype), "v": jnp.zeros(kshape, dtype),
+        "conv": jnp.zeros((nsb, nmamba, batch, cfg.ssm_conv - 1, d_inner),
+                          jnp.float32),
+        "ssm": jnp.zeros((nsb, nmamba, batch, d_inner, cfg.ssm_state),
+                         jnp.float32),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def hybrid_step(params, batch: dict, cfg: ModelConfig, cache: dict,
+                prefill: bool = False):
+    """Decode one token (or prefill a prompt when prefill=True)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = emb.embed_lookup(params["embed"], tokens, cfg.dx100_embed_fwd,
+                         cfg.dx100_embed_bwd).astype(cfg.activation_dtype)
+    if prefill:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        cache_len = jnp.zeros((), jnp.int32)
+    else:
+        positions = jnp.broadcast_to(cache["len"][None, None], (b, 1)
+                                     ).astype(jnp.int32)
+        cache_len = cache["len"]
+
+    def body(carry, inp):
+        x, aux = carry
+        bp, (ck, cv, conv, ssm) = inp
+        mstate = None
+        if not prefill:
+            mstate = [{"conv": conv[m], "ssm": ssm[m]}
+                      for m in range(cfg.attn_period - 1)]
+        x, ncache, nmstate, a = _superblock(
+            bp, x, cfg=cfg, positions=positions, cache=(ck, cv),
+            cache_len=cache_len, mamba_state=mstate,
+            return_mamba_state=prefill)
+        nconv = jnp.stack([st["conv"] for st in nmstate])
+        nssm = jnp.stack([st["ssm"] for st in nmstate])
+        return (x, aux + a), (ncache[0], ncache[1], nconv, nssm)
+
+    (x, _), (nk, nv, nconv, nssm) = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)),
+        (params["blocks"], (cache["k"], cache["v"], cache["conv"],
+                            cache["ssm"])), unroll=cfg.layer_unroll)
+    x = L.rms_norm(x, params["final_norm"])
+    logits = emb.logits_out(params["embed"], x[:, -1:, :])
+    return logits, {"k": nk, "v": nv, "conv": nconv, "ssm": nssm,
+                    "len": cache["len"] + (s if prefill else 1)}

@@ -1,0 +1,264 @@
+"""Shared transformer layers: RMSNorm, RoPE/M-RoPE, GQA attention (qk-norm,
+sliding-window), SwiGLU MLP. Pure functional; params are nested dicts.
+
+Sharding notes (GSPMD logical axes, see launch/mesh.py):
+  activations (batch, seq, embed)   -> (data, None, None)
+  attn qkv/o kernels                -> heads sharded over `model`
+  mlp kernels                       -> d_ff sharded over `model`
+  KV caches                         -> batch over `data`; long-context caches
+                                       seq-sharded over `model` (SP)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Initializer = jax.nn.initializers.Initializer
+
+
+def _dense_init(key, shape, dtype):
+    return jax.nn.initializers.normal(0.02)(key, shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def maybe_constrain(x: jax.Array, *spec):
+    """with_sharding_constraint against the ambient mesh; silently a no-op
+    when no mesh / missing axes / non-divisible dims (host tests)."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or not mesh.axis_names:
+            return x
+        sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+        fixed = []
+        for dim, s in zip(x.shape, tuple(spec) + (None,) * x.ndim):
+            ok = s is not None and s in sizes and dim % sizes[s] == 0
+            fixed.append(s if ok else None)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        # NB: a bare PartitionSpec is silently DROPPED under an abstract
+        # mesh in jax 0.8 — the constraint must carry the mesh itself.
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*fixed[:x.ndim])))
+    except Exception:  # noqa: BLE001 — sharding hints must never crash
+        return x
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def init_rms_norm(d: int, dtype=jnp.float32):
+    return jnp.ones((d,), dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float
+               ) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,hd/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array, theta: float,
+                sections: tuple) -> jax.Array:
+    """Multimodal RoPE (Qwen2-VL §3): the hd/2 frequency slots are split
+    into (temporal, height, width) sections, each rotated by its own
+    position stream. positions3: (3, B, S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    sec_id = jnp.repeat(jnp.arange(3), jnp.asarray(sections),
+                        total_repeat_length=hd // 2)    # (hd/2,)
+    pos = positions3[sec_id, :, :]                      # (hd/2, B, S)
+    ang = jnp.moveaxis(pos, 0, -1).astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def init_attention(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+                   *, qk_norm: bool = False, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (d_model, n_heads * head_dim), dtype),
+        "wk": _dense_init(ks[1], (d_model, n_kv * head_dim), dtype),
+        "wv": _dense_init(ks[2], (d_model, n_kv * head_dim), dtype),
+        "wo": _dense_init(ks[3], (n_heads * head_dim, d_model), dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = init_rms_norm(head_dim)
+        p["k_norm"] = init_rms_norm(head_dim)
+    return p
+
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    if n_rep == 1:
+        return k
+    b, s, nk, hd = k.shape
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+def _causal_mask(sq: int, skv: int, *, offset: int = 0,
+                 window: Optional[int] = None) -> jax.Array:
+    """mask[i, j] True if query (offset+i) may attend key j."""
+    qi = jnp.arange(sq)[:, None] + offset
+    kj = jnp.arange(skv)[None, :]
+    m = kj <= qi
+    if window is not None:
+        m &= kj > qi - window
+    return m
+
+
+def attention(p: dict, x: jax.Array, *, n_heads: int, n_kv: int,
+              head_dim: int, positions: jax.Array, theta: float = 1e4,
+              window: Optional[int] = None, causal: bool = True,
+              mrope_sections: Optional[tuple] = None,
+              positions3: Optional[jax.Array] = None,
+              kv: Optional[tuple] = None,
+              cache: Optional[tuple] = None,
+              cache_len: Optional[jax.Array] = None,
+              ring: bool = False, packed_gqa: bool = False):
+    """GQA attention.
+
+    Modes:
+      train/prefill: kv=None, cache=None -> self-attn over x, causal.
+      cross-attn   : kv=(k, v) precomputed (encoder states).
+      decode       : cache=(ck, cv) rings (B, S_max, n_kv, hd), cache_len
+                     scalar = #valid entries; x is (B, 1, D). Returns
+                     (out, new_cache).
+    """
+    b, s, d = x.shape
+    q = (x @ p["wq"]).reshape(b, s, n_heads, head_dim)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"])
+    if kv is None:
+        k = (x @ p["wk"]).reshape(b, s, n_kv, head_dim)
+        v = (x @ p["wv"]).reshape(b, s, n_kv, head_dim)
+        if "k_norm" in p:
+            k = rms_norm(k, p["k_norm"])
+        if mrope_sections is not None:
+            q = apply_mrope(q, positions3, theta, mrope_sections)
+            k = apply_mrope(k, positions3, theta, mrope_sections)
+        else:
+            q = apply_rope(q, positions, theta)
+            k = apply_rope(k, positions, theta)
+    else:
+        # cross-attention: K/V precomputed and un-rotated; q stays
+        # un-rotated too (content-based addressing into encoder states)
+        k, v = kv
+
+    new_cache = None
+    if cache is not None:
+        ck, cv = cache
+        # ring mode (sliding-window cache sized == window, e.g. danube
+        # long_500k): the cache IS the window; writes wrap around.
+        write_pos = cache_len % ck.shape[1] if ring else cache_len
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (0, write_pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (0, write_pos, 0, 0))
+        new_cache = (ck, cv)
+        k, v = ck, cv
+
+    n_rep = n_heads // n_kv
+    scale = head_dim ** -0.5
+    if packed_gqa:
+        # Beyond-paper opt (§Perf): grouped einsum — KV stays un-replicated
+        # and in its storage dtype; MXU accumulates in f32. Cuts decode KV
+        # traffic by ~2*n_rep vs the repeat+f32-upcast baseline.
+        b_, sq = q.shape[0], q.shape[1]
+        qg = q.reshape(b_, sq, n_kv, n_rep, head_dim)
+        logits = jnp.einsum("bqkrd,bskd->bkrqs", qg, k,
+                            preferred_element_type=jnp.float32) * scale
+        skv = k.shape[1]
+    else:
+        kf = _repeat_kv(k, n_rep)
+        vf = _repeat_kv(v, n_rep)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                            kf.astype(jnp.float32)) * scale
+
+    skv = k.shape[1]
+    m = None
+    if cache is not None:
+        kj = jnp.arange(skv)[None, :]
+        if ring:
+            # every live slot is inside the window by construction
+            m = kj < jnp.minimum(cache_len + s, skv)
+        else:
+            qi = cache_len + jnp.arange(s)[:, None]
+            m = kj <= qi
+            if window is not None:
+                m &= kj > qi - window
+    elif causal and kv is None:
+        m = _causal_mask(s, skv, window=window)
+
+    if packed_gqa:
+        if m is not None:
+            logits = jnp.where(m[None, None, None], logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bkrqs,bskd->bqkrd", w.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+        out = out.reshape(b, s, n_heads * head_dim).astype(x.dtype)
+    else:
+        if m is not None:
+            logits = jnp.where(m[None, None], logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhqk,bkhd->bqhd", w, vf.astype(jnp.float32))
+        out = out.reshape(b, s, n_heads * head_dim).astype(x.dtype)
+    out = out @ p["wo"]
+    if cache is not None:
+        return out, new_cache
+    return out
+
+
+def cross_kv(p: dict, enc_out: jax.Array, *, n_kv: int, head_dim: int):
+    """Precompute cross-attention K/V from encoder states (reused every
+    decode step — the paper's stream-once-reuse-many pattern)."""
+    b, s, _ = enc_out.shape
+    k = (enc_out @ p["wk"]).reshape(b, s, n_kv, head_dim)
+    v = (enc_out @ p["wv"]).reshape(b, s, n_kv, head_dim)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": _dense_init(ks[0], (d_model, d_ff), dtype),
+        "w_up": _dense_init(ks[1], (d_model, d_ff), dtype),
+        "w_down": _dense_init(ks[2], (d_ff, d_model), dtype),
+    }
+
+
+def mlp(p: dict, x: jax.Array) -> jax.Array:
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]

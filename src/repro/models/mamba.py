@@ -1,0 +1,117 @@
+"""Mamba (S6) block — selective state-space layer for the jamba hybrid.
+
+Baseline recurrence is a `jax.lax.scan` over time (exact); decode is the
+single-step update with carried (conv_state, ssm_state). State per layer:
+  conv_state (B, d_conv-1, d_inner), ssm_state (B, d_inner, d_state) — O(1)
+in sequence length, which is what makes jamba long_500k-runnable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _dense_init
+
+
+def init_mamba(key, d_model: int, *, expand: int = 2, d_state: int = 16,
+               d_conv: int = 4, dt_rank: int = 0, dtype=jnp.float32):
+    d_inner = expand * d_model
+    dt_rank = dt_rank or max(d_model // 16, 1)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": _dense_init(ks[0], (d_model, 2 * d_inner), dtype),
+        "conv_w": _dense_init(ks[1], (d_conv, d_inner), dtype),
+        "x_proj": _dense_init(ks[2], (d_inner, dt_rank + 2 * d_state),
+                              dtype),
+        "dt_proj": _dense_init(ks[3], (dt_rank, d_inner), dtype),
+        "A_log": jnp.log(jnp.tile(
+            jnp.arange(1, d_state + 1, dtype=jnp.float32), (d_inner, 1))),
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": _dense_init(ks[5], (d_inner, d_model), dtype),
+    }
+
+
+def _ssm_inputs(p, x):
+    """Shared projections for both scan and step paths."""
+    d_inner = p["dt_proj"].shape[1]
+    dt_rank = p["dt_proj"].shape[0]
+    d_state = (p["x_proj"].shape[1] - dt_rank) // 2
+    xz = x @ p["in_proj"]
+    u, z = jnp.split(xz, 2, axis=-1)           # (B,S,di) each
+    return u, z, d_inner, dt_rank, d_state
+
+
+def _sel_params(p, uc, dt_rank, d_state):
+    """Selective dt/B/C from the conv output."""
+    proj = uc @ p["x_proj"]                    # (..., dt_rank + 2*state)
+    dt = jax.nn.softplus(proj[..., :dt_rank] @ p["dt_proj"])   # (..., di)
+    Bmat = proj[..., dt_rank:dt_rank + d_state]                # (..., st)
+    Cmat = proj[..., dt_rank + d_state:]                       # (..., st)
+    return dt, Bmat, Cmat
+
+
+def mamba_forward(p: dict, x: jax.Array, return_state: bool = False):
+    """Full-sequence forward. x: (B, S, D). With return_state, also returns
+    {"conv", "ssm"} carry usable by mamba_step (prefill -> decode)."""
+    b, s, d = x.shape
+    u, z, d_inner, dt_rank, d_state = _ssm_inputs(p, x)
+    # causal depthwise conv
+    d_conv = p["conv_w"].shape[0]
+    upad = jnp.pad(u, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    uc = sum(upad[:, i:i + s, :] * p["conv_w"][i][None, None, :]
+             for i in range(d_conv))
+    uc = jax.nn.silu(uc)
+    dt, Bm, Cm = _sel_params(p, uc.astype(jnp.float32), dt_rank, d_state)
+    A = -jnp.exp(p["A_log"])                   # (di, st)
+
+    def step(h, inp):
+        uc_t, dt_t, B_t, C_t = inp             # (B,di),(B,di),(B,st),(B,st)
+        dA = jnp.exp(dt_t[..., None] * A[None])            # (B,di,st)
+        dBu = dt_t[..., None] * B_t[:, None, :] * uc_t[..., None]
+        h = dA * h + dBu                                   # (B,di,st)
+        y = jnp.einsum("bds,bs->bd", h, C_t)
+        return h, y
+
+    h0 = jnp.zeros((b, d_inner, d_state), jnp.float32)
+    xs = (jnp.moveaxis(uc.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0))
+    h_last, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)                 # (B,S,di)
+    y = y + uc.astype(jnp.float32) * p["D"][None, None, :]
+    out = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = out @ p["out_proj"]
+    if return_state:
+        state = {"conv": upad[:, s:s + d_conv - 1, :].astype(jnp.float32),
+                 "ssm": h_last}
+        return out, state
+    return out
+
+
+def mamba_init_state(p: dict, batch: int):
+    d_conv, d_inner = p["conv_w"].shape
+    d_state = (p["x_proj"].shape[1] - p["dt_proj"].shape[0]) // 2
+    return {
+        "conv": jnp.zeros((batch, d_conv - 1, d_inner), jnp.float32),
+        "ssm": jnp.zeros((batch, d_inner, d_state), jnp.float32),
+    }
+
+
+def mamba_step(p: dict, state: dict, x: jax.Array):
+    """Single decode step. x: (B, 1, D) -> (out (B,1,D), new_state)."""
+    b = x.shape[0]
+    u, z, d_inner, dt_rank, d_state = _ssm_inputs(p, x)
+    u1 = u[:, 0, :]                                       # (B, di)
+    conv_hist = jnp.concatenate(
+        [state["conv"], u1[:, None, :].astype(jnp.float32)], axis=1)
+    uc = jnp.einsum("bkd,kd->bd", conv_hist, p["conv_w"].astype(jnp.float32))
+    uc = jax.nn.silu(uc)
+    dt, Bm, Cm = _sel_params(p, uc, dt_rank, d_state)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt[..., None] * A[None])
+    dBu = dt[..., None] * Bm[:, None, :] * uc[..., None]
+    h = dA * state["ssm"] + dBu
+    y = jnp.einsum("bds,bs->bd", h, Cm) + uc * p["D"][None]
+    out = (y * jax.nn.silu(z[:, 0].astype(jnp.float32))).astype(x.dtype)
+    new_state = {"conv": conv_hist[:, 1:, :], "ssm": h}
+    return (out @ p["out_proj"])[:, None, :], new_state

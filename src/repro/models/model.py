@@ -1,0 +1,100 @@
+"""build_model(cfg) -> Model: a uniform facade over all five families.
+
+Model methods (all pure functions of (params, batch[, cache])):
+  init(key)                       -> params
+  forward(params, batch)          -> (logits, aux_loss)      [train]
+  loss(params, batch)             -> scalar                  [train]
+  init_cache(batch, max_len)      -> cache pytree            [serve]
+  prefill(params, batch, cache)   -> (logits, cache)         [serve]
+  decode_step(params, batch, cache) -> (logits, cache)       [serve]
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec as ED
+from repro.models import hybrid as HY
+from repro.models import rwkv_lm as RW
+from repro.models import transformer as TF
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array,
+                 mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token cross-entropy; logits (B,S,V), labels (B,S)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+    return jnp.mean(nll)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable
+    init_cache: Callable
+    prefill: Callable
+    decode_step: Callable
+
+    def loss(self, params, batch):
+        logits, aux = self.forward(params, batch)
+        return softmax_xent(logits, batch["labels"],
+                            batch.get("loss_mask")) + 0.01 * aux
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return Model(
+            cfg=cfg,
+            init=lambda key: TF.init_lm(key, cfg),
+            forward=lambda p, b: TF.lm_forward(p, b, cfg),
+            init_cache=lambda batch, max_len, **kw: TF.lm_init_cache(
+                cfg, batch, max_len, **kw),
+            prefill=lambda p, b, c: TF.lm_prefill(p, b, cfg, c),
+            decode_step=lambda p, b, c: TF.lm_decode_step(p, b, cfg, c),
+        )
+    if fam == "hybrid":
+        return Model(
+            cfg=cfg,
+            init=lambda key: HY.init_hybrid_lm(key, cfg),
+            forward=lambda p, b: HY.hybrid_forward(p, b, cfg),
+            init_cache=lambda batch, max_len, **kw: HY.hybrid_init_cache(
+                cfg, batch, max_len, **kw),
+            prefill=lambda p, b, c: HY.hybrid_step(p, b, cfg, c,
+                                                   prefill=True),
+            decode_step=lambda p, b, c: HY.hybrid_step(p, b, cfg, c,
+                                                       prefill=False),
+        )
+    if fam == "ssm":
+        return Model(
+            cfg=cfg,
+            init=lambda key: RW.init_rwkv_lm(key, cfg),
+            forward=lambda p, b: RW.rwkv_forward(p, b, cfg),
+            init_cache=lambda batch, max_len, **kw: RW.rwkv_init_cache(
+                cfg, batch, max_len, **kw),
+            prefill=lambda p, b, c: RW.rwkv_step(p, b, cfg, c,
+                                                 prefill=True),
+            decode_step=lambda p, b, c: RW.rwkv_step(p, b, cfg, c,
+                                                     prefill=False),
+        )
+    if fam == "encdec":
+        return Model(
+            cfg=cfg,
+            init=lambda key: ED.init_encdec(key, cfg),
+            forward=lambda p, b: ED.encdec_forward(p, b, cfg),
+            init_cache=lambda batch, max_len, src_len=None, **kw:
+                ED.encdec_init_cache(cfg, batch, max_len,
+                                     src_len or max_len, **kw),
+            prefill=lambda p, b, c: ED.encdec_prefill(p, b, cfg, c),
+            decode_step=lambda p, b, c: ED.encdec_decode_step(p, b, cfg, c),
+        )
+    raise ValueError(f"unknown family {fam!r}")

@@ -1,0 +1,15 @@
+"""Activation-checkpoint policies for the layer scans."""
+from __future__ import annotations
+
+import jax
+
+
+def wrap_scan_body(body, cfg):
+    """Apply the config's remat policy to a scan body function."""
+    mode = getattr(cfg, "remat", "full")
+    if mode == "none":
+        return body
+    if mode == "dots":
+        return jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(body)   # "full": recompute everything in bwd

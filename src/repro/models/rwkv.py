@@ -1,0 +1,203 @@
+"""RWKV-6 "Finch" block: attention-free time-mix with data-dependent decay.
+
+Per head h with head dim n: state S in R^{n x n};
+  S_t = diag(w_t) S_{t-1} + k_t^T v_t
+  y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+with w_t = exp(-exp(wbase + ddlerp(x_t))) data-dependent (the Finch change
+vs RWKV-5's static decay). Token-shift mixes x_{t-1} into every projection.
+
+Recurrent state is O(1) in sequence length => long_500k runs natively.
+The DX100 technique does not apply inside this layer (no indirection) —
+embedding lookup/grad is the engine's only site, see DESIGN.md
+§Arch-applicability.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (_dense_init, init_rms_norm,
+                                 maybe_constrain, rms_norm)
+
+
+def init_rwkv_tmix(key, d_model: int, n_heads: int, dtype=jnp.float32):
+    hd = d_model // n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "mix_r": jnp.full((d_model,), 0.5, jnp.float32),
+        "mix_k": jnp.full((d_model,), 0.5, jnp.float32),
+        "mix_v": jnp.full((d_model,), 0.5, jnp.float32),
+        "mix_w": jnp.full((d_model,), 0.5, jnp.float32),
+        "wr": _dense_init(ks[0], (d_model, d_model), dtype),
+        "wk": _dense_init(ks[1], (d_model, d_model), dtype),
+        "wv": _dense_init(ks[2], (d_model, d_model), dtype),
+        "wo": _dense_init(ks[3], (d_model, d_model), dtype),
+        # data-dependent decay: w_t = exp(-exp(w_base + x @ w_dd))
+        "w_base": jnp.zeros((d_model,), jnp.float32),
+        "w_dd": _dense_init(ks[4], (d_model, d_model), jnp.float32) * 0.1,
+        "u": jnp.zeros((n_heads, hd), jnp.float32),   # bonus for current tok
+        "ln_x": init_rms_norm(d_model),
+    }
+
+
+def init_rwkv_cmix(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 2)
+    return {
+        "mix_k": jnp.full((d_model,), 0.5, jnp.float32),
+        "wk": _dense_init(ks[0], (d_model, d_ff), dtype),
+        "wv": _dense_init(ks[1], (d_ff, d_model), dtype),
+    }
+
+
+def _token_shift(x, x_prev_last):
+    """shifted[t] = x[t-1]; position 0 takes the carry (B, D)."""
+    shifted = jnp.concatenate([x_prev_last[:, None, :], x[:, :-1, :]],
+                              axis=1)
+    return shifted
+
+
+def _tmix_projections(p, x, shifted, n_heads, bf16_comm=False,
+                      shard_hints=False):
+    """bf16_comm (§Perf): run the TP-sharded projections in bf16 so the
+    resulting cross-`model` collectives move half the bytes; the recurrence
+    and decay math stay f32.
+
+    shard_hints (§Perf): project straight into head form via einsum with a
+    (D, H, hd) weight view constrained to heads-on-`model`. Without this,
+    the (B,S,D)->(B,S,H,hd) reshape is an ambiguous GSPMD boundary and XLA
+    all-gathers every f32 stream (60GiB/step on rwkv prefill_32k)."""
+    b, s, d = x.shape
+    hd = d // n_heads
+    mm_dt = jnp.bfloat16 if bf16_comm else jnp.float32
+    xf = x.astype(mm_dt)
+    sf = shifted.astype(mm_dt)
+
+    def mix(m):
+        return xf * m.astype(mm_dt) + sf * (1 - m).astype(mm_dt)
+
+    if shard_hints:
+        from repro.models.layers import maybe_constrain
+
+        def proj_h(mixed, w):
+            # pin the activation replicated over `model` (batch-sharded
+            # only): otherwise GSPMD D-shards the elementwise mix and
+            # all-gathers it in front of every contraction
+            mixed = maybe_constrain(mixed, "data", None, None)
+            w3 = maybe_constrain(w.astype(mm_dt).reshape(d, n_heads, hd),
+                                 None, "model", None)
+            out = jnp.einsum("bsd,dhk->bshk", mixed, w3,
+                             preferred_element_type=jnp.float32)
+            return maybe_constrain(out, "data", None, "model", None)
+
+        r = proj_h(mix(p["mix_r"]), p["wr"])
+        k = proj_h(mix(p["mix_k"]), p["wk"])
+        v = proj_h(mix(p["mix_v"]), p["wv"])
+        w = jnp.exp(-jnp.exp(
+            p["w_base"].reshape(n_heads, hd)[None, None]
+            + proj_h(mix(p["mix_w"]), p["w_dd"])))
+        return r, k, v, w
+
+    def proj(mixed, w):
+        return (mixed @ w.astype(mm_dt)).astype(jnp.float32)
+
+    r = proj(mix(p["mix_r"]), p["wr"]).reshape(b, s, n_heads, hd)
+    k = proj(mix(p["mix_k"]), p["wk"]).reshape(b, s, n_heads, hd)
+    v = proj(mix(p["mix_v"]), p["wv"]).reshape(b, s, n_heads, hd)
+    w = jnp.exp(-jnp.exp(
+        p["w_base"] + proj(mix(p["mix_w"]), p["w_dd"]))).reshape(
+            b, s, n_heads, hd)
+    return r, k, v, w
+
+
+def _head_norm(y, scale, n_heads):
+    """Per-head RMS norm (RWKV's GroupNorm): normalization stays local to
+    the head => no cross-`model` gather before the output projection."""
+    b, s, d = y.shape
+    hd = d // n_heads
+    yh = y.reshape(b, s, n_heads, hd)
+    yh = rms_norm(yh, jnp.ones((hd,), jnp.float32))
+    return (yh.reshape(b, s, d) * scale.astype(yh.dtype))
+
+
+def rwkv_tmix_forward(p: dict, x: jax.Array, n_heads: int,
+                      return_state: bool = False, bf16_comm: bool = False,
+                      shard_hints: bool = False):
+    """Full-sequence time-mix. x: (B, S, D)."""
+    b, s, d = x.shape
+    hd = d // n_heads
+    shifted = _token_shift(x, jnp.zeros((b, d), x.dtype))
+    r, k, v, w = _tmix_projections(p, x, shifted, n_heads, bf16_comm,
+                                   shard_hints)
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp                       # (B,H,hd) each
+        kv = k_t[..., :, None] * v_t[..., None, :]     # (B,H,hd,hd)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t,
+                       S + p["u"][None, :, :, None] * kv)
+        S = w_t[..., :, None] * S + kv
+        return S, y
+
+    S0 = jnp.zeros((b, n_heads, hd, hd), jnp.float32)
+    if shard_hints:
+        S0 = maybe_constrain(S0, "data", "model", None, None)
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, w))
+    S_last, ys = jax.lax.scan(step, S0, xs)
+    y = jnp.moveaxis(ys, 0, 1)
+    if shard_hints:
+        y = maybe_constrain(y, "data", None, "model", None)
+    y = y.reshape(b, s, d)                             # (B,S,D)
+    y = _head_norm(y, p["ln_x"], n_heads)
+    mm_dt = jnp.bfloat16 if bf16_comm else jnp.float32
+    out = (y.astype(mm_dt) @ p["wo"].astype(mm_dt)).astype(x.dtype)
+    if return_state:
+        return out, {"S": S_last,
+                     "x_prev": x[:, -1, :].astype(jnp.float32)}
+    return out
+
+
+def rwkv_tmix_step(p: dict, state: dict, x: jax.Array, n_heads: int,
+                   bf16_comm: bool = False):
+    """Single decode step. x: (B, 1, D). state: {"S": (B,H,hd,hd),
+    "x_prev": (B, D)}."""
+    b, _, d = x.shape
+    hd = d // n_heads
+    shifted = state["x_prev"][:, None, :]
+    r, k, v, w = _tmix_projections(p, x, shifted, n_heads, bf16_comm)
+    r_t, k_t, v_t, w_t = (a[:, 0] for a in (r, k, v, w))
+    kv = k_t[..., :, None] * v_t[..., None, :]
+    y = jnp.einsum("bhk,bhkv->bhv", r_t,
+                   state["S"] + p["u"][None, :, :, None] * kv)
+    S = w_t[..., :, None] * state["S"] + kv
+    y = _head_norm(y.reshape(b, 1, d), p["ln_x"], n_heads)
+    mm_dt = jnp.bfloat16 if bf16_comm else jnp.float32
+    out = (y.astype(mm_dt) @ p["wo"].astype(mm_dt)).astype(x.dtype)
+    return out, {"S": S, "x_prev": x[:, 0, :]}
+
+
+def rwkv_cmix_forward(p: dict, x: jax.Array,
+                      x_prev_last=None, bf16_comm: bool = False,
+                      shard_hints: bool = False) -> jax.Array:
+    b, s, d = x.shape
+    if x_prev_last is None:
+        x_prev_last = jnp.zeros((b, d), x.dtype)
+    shifted = _token_shift(x, x_prev_last)
+    mm_dt = jnp.bfloat16 if bf16_comm else jnp.float32
+    xf = x.astype(mm_dt)
+    mixed = xf * p["mix_k"].astype(mm_dt) \
+        + shifted.astype(mm_dt) * (1 - p["mix_k"]).astype(mm_dt)
+    if shard_hints:
+        from repro.models.layers import maybe_constrain
+        mixed = maybe_constrain(mixed, "data", None, None)
+    h = jnp.square(jax.nn.relu(mixed @ p["wk"].astype(mm_dt)))
+    if shard_hints:
+        h = maybe_constrain(h, "data", None, "model")
+    return (h @ p["wv"].astype(mm_dt)).astype(x.dtype)
+
+
+def rwkv_init_state(batch: int, d_model: int, n_heads: int):
+    hd = d_model // n_heads
+    return {
+        "S": jnp.zeros((batch, n_heads, hd, hd), jnp.float32),
+        "x_prev": jnp.zeros((batch, d_model), jnp.float32),
+        "x_prev_c": jnp.zeros((batch, d_model), jnp.float32),
+    }

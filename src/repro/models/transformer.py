@@ -1,0 +1,192 @@
+"""Decoder-only LM covering the dense, MoE, and VLM families.
+
+Layers are stacked along a leading axis and executed with `jax.lax.scan`
+(small HLO => fast multi-pod compiles; remat policy applies per scan body).
+The embedding fwd/bwd runs through the DX100 engine (see embedding.py); MoE
+FFNs run the full reorder/coalesce/interleave dispatch (see moe.py).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.remat import wrap_scan_body
+from repro.models import embedding as emb
+from repro.models import layers as L
+from repro.models import moe as M
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_dense_layer(key, cfg: ModelConfig):
+    ka, km = jax.random.split(key)
+    p = {
+        "ln1": L.init_rms_norm(cfg.d_model),
+        "ln2": L.init_rms_norm(cfg.d_model),
+        "attn": L.init_attention(ka, cfg.d_model, cfg.n_heads,
+                                 cfg.n_kv_heads, cfg.head_dim,
+                                 qk_norm=cfg.qk_norm,
+                                 dtype=cfg.weight_dtype),
+    }
+    if cfg.family == "moe":
+        p["moe"] = M.init_moe(km, cfg.d_model, cfg.d_ff, cfg.n_experts,
+                              dtype=cfg.weight_dtype)
+    else:
+        p["mlp"] = L.init_mlp(km, cfg.d_model, cfg.d_ff,
+                              dtype=cfg.weight_dtype)
+    return p
+
+
+def init_lm(key, cfg: ModelConfig):
+    ke, kl, kf = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    layers = jax.vmap(lambda k: init_dense_layer(k, cfg))(layer_keys)
+    return {
+        "embed": emb.init_embedding(ke, cfg.vocab, cfg.d_model,
+                                    dtype=cfg.weight_dtype),
+        "layers": layers,
+        "final_norm": L.init_rms_norm(cfg.d_model),
+    }
+
+
+# ---------------------------------------------------------------------------
+# layer body (shared by train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+def _layer(p, x, *, cfg: ModelConfig, positions, positions3=None,
+           cache=None, cache_len=None, ring=False):
+    h = L.rms_norm(x, p["ln1"])
+    attn_out = L.attention(
+        p["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+        head_dim=cfg.head_dim, positions=positions, theta=cfg.rope_theta,
+        window=cfg.sliding_window, mrope_sections=cfg.mrope_sections,
+        positions3=positions3, cache=cache, cache_len=cache_len, ring=ring,
+        packed_gqa=cfg.opt_attention)
+    new_cache = None
+    if cache is not None:
+        attn_out, new_cache = attn_out
+    x = x + attn_out
+    h = L.rms_norm(x, p["ln2"])
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "moe":
+        ffn_out, router_logits = M.moe_ffn_auto(
+            p["moe"], h, n_experts=cfg.n_experts, top_k=cfg.top_k,
+            capacity_factor=cfg.capacity_factor, use_ep=cfg.moe_a2a)
+        aux = M.moe_aux_loss(router_logits, cfg.n_experts, cfg.top_k)
+    else:
+        ffn_out = L.mlp(p["mlp"], h)
+    return x + ffn_out, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# forward (train) — full sequence, no cache
+# ---------------------------------------------------------------------------
+
+def lm_forward(params, batch: dict, cfg: ModelConfig):
+    """batch: {"tokens": (B,S)} (+ "patch_embeds", "positions3" for vlm).
+    Returns (logits (B,S,V), aux_loss scalar)."""
+    tokens = batch["tokens"]
+    x = emb.embed_lookup(params["embed"], tokens,
+                         cfg.dx100_embed_fwd, cfg.dx100_embed_bwd)
+    x = x.astype(cfg.activation_dtype)
+    b = tokens.shape[0]
+    if "patch_embeds" in batch:          # vlm: prepend stubbed patch tokens
+        x = jnp.concatenate(
+            [batch["patch_embeds"].astype(cfg.activation_dtype), x], axis=1)
+    s = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    positions3 = batch.get("positions3")
+    if cfg.mrope_sections is not None and positions3 is None:
+        positions3 = jnp.broadcast_to(positions[None], (3, b, s))
+
+    def body(carry, lp):
+        x, aux = carry
+        x, _, a = _layer(lp, x, cfg=cfg, positions=positions,
+                         positions3=positions3)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(wrap_scan_body(body, cfg),
+                               (x, jnp.zeros((), jnp.float32)),
+                               params["layers"], unroll=cfg.layer_unroll)
+    x = L.rms_norm(x, params["final_norm"])
+    if "patch_embeds" in batch:
+        x = x[:, -tokens.shape[1]:, :]   # logits only over text positions
+    logits = emb.logits_out(params["embed"], x)
+    return logits, aux / max(cfg.n_layers, 1)
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + single-token decode with per-layer KV caches
+# ---------------------------------------------------------------------------
+
+def lm_init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or cfg.activation_dtype
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "len": jnp.zeros((), jnp.int32)}
+
+
+def lm_prefill(params, batch: dict, cfg: ModelConfig, cache: dict):
+    """Run the prompt, filling the cache. Returns (last_logits, cache)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = emb.embed_lookup(params["embed"], tokens, cfg.dx100_embed_fwd,
+                         cfg.dx100_embed_bwd).astype(cfg.activation_dtype)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    positions3 = None
+    if cfg.mrope_sections is not None:
+        positions3 = jnp.broadcast_to(positions[None], (3, b, s))
+
+    def body(carry, inp):
+        x, aux = carry
+        lp, (ck, cv) = inp
+        x, new_cache, a = _layer(lp, x, cfg=cfg, positions=positions,
+                                 positions3=positions3, cache=(ck, cv),
+                                 cache_len=jnp.zeros((), jnp.int32))
+        return (x, aux + a), new_cache
+
+    (x, _), (nk, nv) = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)),
+        (params["layers"], (cache["k"], cache["v"])),
+        unroll=cfg.layer_unroll)
+    x = L.rms_norm(x, params["final_norm"])
+    logits = emb.logits_out(params["embed"], x[:, -1:, :])
+    return logits, {"k": nk, "v": nv,
+                    "len": jnp.asarray(s, jnp.int32)}
+
+
+def lm_decode_step(params, batch: dict, cfg: ModelConfig, cache: dict):
+    """One token for every sequence. batch: {"tokens": (B, 1)}."""
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    x = emb.embed_lookup(params["embed"], tokens, cfg.dx100_embed_fwd,
+                         cfg.dx100_embed_bwd).astype(cfg.activation_dtype)
+    positions = jnp.broadcast_to(cache["len"][None, None], (b, 1)
+                                 ).astype(jnp.int32)
+    positions3 = None
+    if cfg.mrope_sections is not None:
+        positions3 = jnp.broadcast_to(positions[None], (3, b, 1))
+    # ring/SWA: a cache sized exactly to the sliding window wraps around
+    ring = (cfg.sliding_window is not None
+            and cache["k"].shape[2] <= cfg.sliding_window)
+
+    def body(carry, inp):
+        x, aux = carry
+        lp, (ck, cv) = inp
+        x, new_cache, a = _layer(lp, x, cfg=cfg, positions=positions,
+                                 positions3=positions3, cache=(ck, cv),
+                                 cache_len=cache["len"], ring=ring)
+        return (x, aux + a), new_cache
+
+    (x, _), (nk, nv) = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)),
+        (params["layers"], (cache["k"], cache["v"])),
+        unroll=cfg.layer_unroll)
+    x = L.rms_norm(x, params["final_norm"])
+    logits = emb.logits_out(params["embed"], x)
+    return logits, {"k": nk, "v": nv, "len": cache["len"] + 1}

@@ -1,0 +1,4 @@
+from repro.optim.adamw import adamw_init, adamw_update  # noqa: F401
+from repro.optim.schedules import make_schedule  # noqa: F401
+from repro.optim.compress import (compress_grads, decompress_grads,  # noqa: F401
+                                  global_norm_clip)

@@ -1,0 +1,68 @@
+"""Gradient compression + clipping for cross-pod all-reduce.
+
+int8 block-quantized gradient exchange: each (block of 256) values shares an
+f32 absmax scale => ~4x less DCN/ICI traffic on the `pod` axis all-reduce.
+Error feedback (residual carry) keeps the compression unbiased over steps —
+standard large-scale distributed-training practice, and the analogue of the
+paper's "reduce memory traffic by coalescing" applied to collectives.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _quantize(x: jax.Array):
+    flat = x.reshape(-1).astype(jnp.float32)
+    pad = (-flat.shape[0]) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequantize(q: jax.Array, scale: jax.Array, shape, dtype):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def compress_grads(grads, residual=None):
+    """Returns (compressed pytree of (q, scale), new_residual)."""
+    if residual is None:
+        residual = jax.tree_util.tree_map(jnp.zeros_like, grads)
+    carried = jax.tree_util.tree_map(lambda g, r: g + r.astype(g.dtype),
+                                     grads, residual)
+    comp = jax.tree_util.tree_map(_quantize, carried)
+    q = jax.tree_util.tree_map(lambda t: t[0], comp,
+                               is_leaf=lambda x: isinstance(x, tuple))
+    s = jax.tree_util.tree_map(lambda t: t[1], comp,
+                               is_leaf=lambda x: isinstance(x, tuple))
+    decomp = jax.tree_util.tree_map(
+        lambda qq, ss, g: _dequantize(qq, ss, g.shape, g.dtype),
+        q, s, grads)
+    new_residual = jax.tree_util.tree_map(lambda c, d: c - d, carried,
+                                          decomp)
+    return (q, s), new_residual
+
+
+def decompress_grads(comp, like):
+    q, s = comp
+    return jax.tree_util.tree_map(
+        lambda qq, ss, g: _dequantize(qq, ss, g.shape, g.dtype), q, s, like)
+
+
+def global_norm_clip(grads, max_norm: float = 1.0):
+    leaves = jax.tree_util.tree_leaves(grads)
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in leaves))
+    factor = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * factor).astype(g.dtype),
+        grads), norm

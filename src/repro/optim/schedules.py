@@ -1,0 +1,38 @@
+"""LR schedules: cosine (default) and WSD (Warmup-Stable-Decay, the
+minicpm-2b schedule from arXiv:2404.06395)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, peak_lr: float, warmup: int, total: int,
+                    floor: float = 0.1):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = peak_lr * step / max(warmup, 1)
+    t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def wsd_schedule(step, *, peak_lr: float, warmup: int, total: int,
+                 decay_frac: float = 0.1, floor: float = 0.0):
+    """Warmup -> Stable (flat) -> Decay (last decay_frac of training)."""
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = peak_lr * step / max(warmup, 1)
+    decay_start = total * (1 - decay_frac)
+    t = jnp.clip((step - decay_start) / max(total - decay_start, 1), 0., 1.)
+    decay = peak_lr * (1 - (1 - floor) * t)
+    out = jnp.where(step < warmup, warm,
+                    jnp.where(step < decay_start, peak_lr, decay))
+    return out
+
+
+def make_schedule(name: str, *, peak_lr: float = 3e-4, warmup: int = 100,
+                  total: int = 10000):
+    if name == "cosine":
+        return lambda s: cosine_schedule(s, peak_lr=peak_lr, warmup=warmup,
+                                         total=total)
+    if name == "wsd":
+        return lambda s: wsd_schedule(s, peak_lr=peak_lr, warmup=warmup,
+                                      total=total)
+    raise ValueError(f"unknown schedule {name!r}")

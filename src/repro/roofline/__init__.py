@@ -1,0 +1,3 @@
+from repro.roofline.analysis import (HW, analyze_compiled,  # noqa: F401
+                                     collective_bytes, model_flops,
+                                     roofline_terms)

@@ -1,0 +1,162 @@
+"""Roofline terms from a compiled dry-run artifact (no hardware needed).
+
+  compute    = HLO_FLOPs   / (chips x 197e12 FLOP/s bf16)
+  memory     = HLO_bytes   / (chips x 819e9  B/s HBM)
+  collective = coll_bytes  / (chips x 50e9   B/s per ICI link)
+
+FLOPs/bytes come from compiled.cost_analysis(); collective bytes are NOT in
+cost_analysis — we parse the post-SPMD optimized HLO (compiled.as_text())
+and sum operand sizes of all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute ops.
+
+NOTE on per-chip accounting: with the host-device dry-run, cost_analysis
+reports the per-partition (per-chip) module, so terms divide by 1 chip of
+peak — i.e. terms are already per-chip seconds. MODEL_FLOPS/HLO_FLOPs uses
+the whole-step model FLOPs divided by chip count for comparability.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+# TPU v5e-class hardware constants (from the assignment)
+HW = {
+    "peak_flops_bf16": 197e12,     # per chip
+    "hbm_gbps": 819e9,             # per chip
+    "ici_link_gbps": 50e9,         # per link
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:%?[\w.\-]+\s*=\s*)?"
+    r"\(?([a-z0-9_\[\],\s{}\/#()]*?)\)?\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.MULTILINE)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes per collective kind from optimized HLO."""
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        s = line.lstrip()
+        # match "<result-shape> <op>(" — result shape precedes op name, e.g.
+        #   %ag = bf16[4,1024]{1,0} all-gather(%x), ...
+        m = re.search(
+            r"=\s*([^=]*?)\s+"
+            r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+            r"collective-permute)(?:-start)?\(", s)
+        if not m:
+            continue
+        kind = m.group(2)
+        nbytes = _shape_bytes(m.group(1))
+        out[kind] = out.get(kind, 0) + nbytes
+    return out
+
+
+def model_flops(cfg, *, batch: int, seq: int, kind: str = "train",
+                n_params: Optional[int] = None,
+                n_active_params: Optional[int] = None) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE); D = tokens processed.
+    Train counts fwd+bwd (6x); prefill/decode count fwd only (2x)."""
+    n = n_active_params if n_active_params is not None else n_params
+    tokens = batch * seq if kind != "decode" else batch * 1
+    mult = 6 if kind == "train" else 2
+    return float(mult) * float(n) * float(tokens)
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    flops: float
+    bytes_accessed: float
+    coll_bytes: Dict[str, int]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops_total: float
+    useful_ratio: float
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline_terms(*, hlo_flops: float, hlo_bytes: float,
+                   coll_bytes: Dict[str, int], chips: int,
+                   model_flops_total: float = 0.0,
+                   ici_links: int = 4) -> RooflineReport:
+    """All inputs are PER-CHIP (the partitioned module) except
+    model_flops_total (whole step)."""
+    compute_s = hlo_flops / HW["peak_flops_bf16"]
+    memory_s = hlo_bytes / HW["hbm_gbps"]
+    total_coll = float(sum(coll_bytes.values()))
+    collective_s = total_coll / (HW["ici_link_gbps"] * ici_links)
+    dom = max((("compute", compute_s), ("memory", memory_s),
+               ("collective", collective_s)), key=lambda kv: kv[1])[0]
+    per_chip_model = model_flops_total / max(chips, 1)
+    useful = per_chip_model / hlo_flops if hlo_flops else 0.0
+    return RooflineReport(
+        flops=hlo_flops, bytes_accessed=hlo_bytes, coll_bytes=coll_bytes,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dom, model_flops_total=model_flops_total,
+        useful_ratio=useful)
+
+
+def analyze_compiled(compiled, *, chips: int, model_flops_total: float = 0.0,
+                     ici_links: int = 4) -> RooflineReport:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):      # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(compiled.as_text())
+    return roofline_terms(hlo_flops=flops, hlo_bytes=nbytes,
+                          coll_bytes=coll, chips=chips,
+                          model_flops_total=model_flops_total,
+                          ici_links=ici_links)
+
+
+def count_params(params) -> int:
+    import jax
+    return sum(int(p.size) for p in jax.tree_util.tree_leaves(params))
+
+
+def active_param_fraction(cfg) -> float:
+    """MoE: fraction of expert params active per token (top_k/n_experts),
+    non-expert params always active."""
+    if cfg.n_experts == 0:
+        return 1.0
+    # expert share of per-layer params (approx): 3*D*F*E vs attn+router
+    expert = 3 * cfg.d_model * cfg.d_ff * cfg.n_experts
+    if cfg.family == "hybrid":
+        # only layers at moe_period carry experts
+        moe_layers = cfg.n_layers // cfg.moe_period
+        expert = 3 * cfg.d_model * cfg.d_ff * cfg.n_experts * (
+            moe_layers / cfg.n_layers)
+    attn = 2 * cfg.d_model * (cfg.n_heads + cfg.n_kv_heads) * cfg.head_dim
+    other = attn + cfg.d_model * cfg.n_experts
+    dense_frac = other / (other + expert)
+    active = dense_frac + (1 - dense_frac) * (cfg.top_k
+                                              / max(cfg.n_experts, 1))
+    return active

@@ -1,0 +1,2 @@
+from repro.serve.kv_cache import PagedKVCache  # noqa: F401
+from repro.serve.serve import ServeLoop  # noqa: F401

@@ -1,0 +1,124 @@
+"""Paged KV cache — the DX100 scratchpad/row-table mapped onto serving.
+
+A global page pool (pages x page_size tokens) holds K/V for all sequences;
+each sequence owns a page list (the page table). This is literally the
+paper's structure:
+
+  page table            = Row Table (which "DRAM rows" a bulk access touches)
+  page gather for attn   = ILD through the row-table plan (sorted, coalesced:
+                           pages shared by beam/prefix-cached sequences are
+                           fetched ONCE)
+  cache append           = IST with unique destinations (single writer)
+
+The pool is sharded over the DP axes by allocating disjoint page ranges per
+shard (address-range partitioning, §6.6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bulk_ops
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PagedKVCache:
+    """Single-layer pool. Stack L of them (vmap/scan) for a full model."""
+    k_pool: jax.Array          # (num_pages, page_size, n_kv, hd)
+    v_pool: jax.Array
+    page_table: jax.Array      # (B, max_pages) int32, -1 = unallocated
+    seq_lens: jax.Array        # (B,) int32
+    free_head: jax.Array       # () int32 — bump allocator cursor
+
+    @staticmethod
+    def create(num_pages: int, page_size: int, n_kv: int, hd: int,
+               batch: int, max_pages: int, dtype=jnp.bfloat16):
+        return PagedKVCache(
+            k_pool=jnp.zeros((num_pages, page_size, n_kv, hd), dtype),
+            v_pool=jnp.zeros((num_pages, page_size, n_kv, hd), dtype),
+            page_table=jnp.full((batch, max_pages), -1, jnp.int32),
+            seq_lens=jnp.zeros((batch,), jnp.int32),
+            free_head=jnp.zeros((), jnp.int32),
+        )
+
+    @property
+    def page_size(self):
+        return self.k_pool.shape[1]
+
+
+def alloc_pages(cache: PagedKVCache, n_per_seq: jax.Array) -> PagedKVCache:
+    """Bump-allocate pages for each sequence (n_per_seq: (B,) int32)."""
+    b, mp = cache.page_table.shape
+    start = cache.free_head + jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(n_per_seq)[:-1]])
+    slot = jnp.sum(cache.page_table >= 0, axis=1)            # next free slot
+    col = jnp.arange(mp, dtype=jnp.int32)[None, :]
+    take = (col >= slot[:, None]) & (col < (slot + n_per_seq)[:, None])
+    new_ids = start[:, None] + (col - slot[:, None])
+    table = jnp.where(take, new_ids, cache.page_table)
+    return dataclasses.replace(
+        cache, page_table=table,
+        free_head=cache.free_head + jnp.sum(n_per_seq))
+
+
+def append_token(cache: PagedKVCache, k: jax.Array, v: jax.Array
+                 ) -> PagedKVCache:
+    """IST: write one token's K/V per sequence at its current length.
+    k, v: (B, n_kv, hd). Pages must already be allocated."""
+    ps = cache.page_size
+    page_idx = cache.seq_lens // ps
+    offs = cache.seq_lens % ps
+    pages = jnp.take_along_axis(cache.page_table, page_idx[:, None],
+                                axis=1)[:, 0]                # (B,)
+    # single writer per (page, offset): destinations are unique
+    flat_dest = pages * ps + offs
+    kp = cache.k_pool.reshape(-1, *cache.k_pool.shape[2:])
+    vp = cache.v_pool.reshape(-1, *cache.v_pool.shape[2:])
+    kp = kp.at[flat_dest].set(k.astype(kp.dtype), unique_indices=True)
+    vp = vp.at[flat_dest].set(v.astype(vp.dtype), unique_indices=True)
+    return dataclasses.replace(
+        cache,
+        k_pool=kp.reshape(cache.k_pool.shape),
+        v_pool=vp.reshape(cache.v_pool.shape),
+        seq_lens=cache.seq_lens + 1)
+
+
+def gather_pages(cache: PagedKVCache, *, dedup: bool = True):
+    """ILD: fetch every sequence's pages from the pool, sorted+coalesced.
+
+    Returns (k, v): (B, max_pages*page_size, n_kv, hd) plus a validity
+    length per sequence. Pages shared across sequences (prefix caching,
+    beam search) are fetched once by the engine path.
+    """
+    b, mp = cache.page_table.shape
+    ps = cache.page_size
+    pages = jnp.clip(cache.page_table, 0, cache.k_pool.shape[0] - 1)
+    flat = pages.reshape(-1)
+    kflat = cache.k_pool.reshape(cache.k_pool.shape[0], -1)
+    vflat = cache.v_pool.reshape(cache.v_pool.shape[0], -1)
+    kg = bulk_ops.bulk_gather(kflat, flat, dedup=dedup)
+    vg = bulk_ops.bulk_gather(vflat, flat, dedup=dedup)
+    shp = (b, mp * ps) + cache.k_pool.shape[2:]
+    return (kg.reshape(b, mp, ps, *cache.k_pool.shape[2:]).reshape(shp),
+            vg.reshape(b, mp, ps, *cache.v_pool.shape[2:]).reshape(shp),
+            cache.seq_lens)
+
+
+def paged_decode_attention(q: jax.Array, cache: PagedKVCache, *,
+                           n_rep: int) -> jax.Array:
+    """Flash-decode over gathered pages. q: (B, 1, H, hd)."""
+    k, v, lens = gather_pages(cache)
+    b, skv = k.shape[0], k.shape[1]
+    kf = jnp.repeat(k, n_rep, axis=2)
+    vf = jnp.repeat(v, n_rep, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        kf.astype(jnp.float32)) / (q.shape[-1] ** 0.5)
+    mask = jnp.arange(skv)[None, :] < lens[:, None]
+    logits = jnp.where(mask[:, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, vf.astype(jnp.float32))
+    return out.astype(q.dtype)

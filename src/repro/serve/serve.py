@@ -1,0 +1,74 @@
+"""Batched serving loop: continuous-batching-lite over fixed slots.
+
+Requests occupy batch slots; each engine tick runs either a prefill (for
+newly admitted requests) or one decode step for all active slots. The
+jitted decode step is shape-stable (fixed batch, fixed max cache len), so
+one compilation serves the whole workload — the serving analogue of the
+paper's "compile the access program once, launch per tile".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (S,) int32
+    max_new_tokens: int = 16
+    out_tokens: Optional[list] = None
+
+
+@dataclasses.dataclass
+class ServeLoop:
+    model: Any
+    batch_slots: int = 4
+    max_cache_len: int = 256
+
+    def __post_init__(self):
+        cfg = self.model.cfg
+        self._decode = jax.jit(self.model.decode_step)
+        self._prefill = jax.jit(self.model.prefill)
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        """Admit requests in waves of `batch_slots`; greedy-decode each."""
+        cfg = self.model.cfg
+        params = getattr(self, "params", None)
+        assert params is not None, "set loop.params first"
+        done: List[Request] = []
+        queue = list(requests)
+        while queue:
+            wave = queue[:self.batch_slots]
+            queue = queue[self.batch_slots:]
+            b = len(wave)
+            # pad the wave to the slot count for shape stability
+            while len(wave) < self.batch_slots:
+                wave.append(Request(rid=-1, prompt=wave[0].prompt,
+                                    max_new_tokens=wave[0].max_new_tokens))
+            plen = max(len(r.prompt) for r in wave)
+            toks = np.stack([np.pad(r.prompt, (plen - len(r.prompt), 0))
+                             for r in wave]).astype(np.int32)
+            cache = self.model.init_cache(self.batch_slots,
+                                          self.max_cache_len)
+            logits, cache = self._prefill(params,
+                                          {"tokens": jnp.asarray(toks)},
+                                          cache)
+            steps = max(r.max_new_tokens for r in wave)
+            outs = [[] for _ in wave]
+            for _ in range(steps):
+                nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+                for i, r in enumerate(wave):
+                    if r.rid >= 0 and len(outs[i]) < r.max_new_tokens:
+                        outs[i].append(int(nxt[i]))
+                logits, cache = self._decode(params,
+                                             {"tokens": nxt[:, None]}, cache)
+            for i, r in enumerate(wave):
+                if r.rid >= 0:
+                    r.out_tokens = outs[i]
+                    done.append(r)
+        return done

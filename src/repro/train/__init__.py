@@ -1,0 +1,3 @@
+from repro.train.trainer import Trainer, make_train_step  # noqa: F401
+from repro.train.checkpoint import (load_checkpoint, save_checkpoint,  # noqa: F401
+                                    latest_step)

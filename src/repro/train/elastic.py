@@ -1,0 +1,58 @@
+"""Elastic scaling: resume a run on a different device count / mesh shape.
+
+Scenario (DESIGN.md §7): a pod drops out of a (2,16,16) job. The controller
+rebuilds a (16,16) mesh, recomputes sharding trees for the SAME pytree
+structure, reloads the last checkpoint re-sharded onto the new mesh, and
+adjusts the data pipeline shard count. Checkpoints store unsharded leaves,
+so any (old mesh -> new mesh) transition is a pure device_put.
+
+Straggler mitigation: the synchronous-SPMD analogue is (a) deterministic
+recomputable batches (data/pipeline.py), so a replacement host joins with
+zero coordination, and (b) checkpoint cadence bounding lost work.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+
+from repro.launch import mesh as meshlib
+from repro.train import checkpoint as ckpt
+
+
+def remesh_plan(params_shape, old_mesh_shape: tuple, new_mesh,
+                global_batch: int):
+    """Describe the transition; raises if the new topology can't run it."""
+    axis = dict(zip(new_mesh.axis_names, new_mesh.devices.shape))
+    dp = axis.get("data", 1) * axis.get("pod", 1)
+    if global_batch % dp != 0:
+        raise ValueError(
+            f"global_batch {global_batch} not divisible by new DP={dp}; "
+            f"adjust batch or grad-accumulation factor")
+    return {
+        "old_mesh": tuple(old_mesh_shape),
+        "new_mesh": tuple(new_mesh.devices.shape),
+        "per_device_batch": global_batch // dp,
+        "grad_accum": 1,
+    }
+
+
+def elastic_restore(directory: str, template: Any, new_mesh, *,
+                    step: Optional[int] = None):
+    """Load the latest checkpoint re-sharded for `new_mesh`."""
+    pspecs = meshlib.param_specs(template["params"], new_mesh)
+    zspecs = meshlib.zero1_specs(pspecs, template["params"], new_mesh)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def named(tree):
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(new_mesh, s), tree,
+            is_leaf=lambda x: isinstance(x, P))
+
+    shardings = {
+        "params": named(pspecs),
+        "opt": {"mu": named(zspecs), "nu": named(zspecs),
+                "step": NamedSharding(new_mesh, P())},
+    }
+    return ckpt.load_checkpoint(directory, template, step=step,
+                                shardings=shardings)

@@ -1,0 +1,128 @@
+"""Hypothesis property tests on the engine's invariants."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (bulk_gather, bulk_rmw, bulk_scatter, coalesce,
+                        fuse_ranges, make_row_table_plan, sort_indices)
+
+_small = dict(max_examples=25, deadline=None)
+
+
+@st.composite
+def table_and_indices(draw, max_rows=512, max_idx=512):
+    n = draw(st.integers(2, max_rows))
+    t = draw(st.integers(1, max_idx))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    table = rng.normal(size=(n,)).astype(np.float32)
+    idx = rng.integers(0, n, size=(t,)).astype(np.int32)
+    return jnp.asarray(table), jnp.asarray(idx)
+
+
+class TestGatherProperties:
+    @given(table_and_indices())
+    @settings(**_small)
+    def test_reorder_invariance(self, ti):
+        """Reordered+coalesced gather == direct gather (the paper's core
+        correctness claim: reordering loads never changes results)."""
+        table, idx = ti
+        opt = bulk_gather(table, idx, sort=True, dedup=True)
+        ref = table[idx]
+        np.testing.assert_array_equal(np.asarray(opt), np.asarray(ref))
+
+    @given(table_and_indices())
+    @settings(**_small)
+    def test_coalesce_roundtrip(self, ti):
+        """unique[inverse] == idx, unique sorted, count correct."""
+        _, idx = ti
+        uniq, inv, n_u = coalesce(idx)
+        np.testing.assert_array_equal(np.asarray(uniq)[np.asarray(inv)],
+                                      np.asarray(idx))
+        u = np.asarray(uniq)
+        assert (np.diff(u) >= 0).all()
+        assert int(n_u) == len(np.unique(np.asarray(idx)))
+
+    @given(table_and_indices())
+    @settings(**_small)
+    def test_sort_is_permutation(self, ti):
+        _, idx = ti
+        sidx, perm = sort_indices(idx)
+        assert sorted(np.asarray(perm).tolist()) == list(range(idx.shape[0]))
+        np.testing.assert_array_equal(np.asarray(sidx),
+                                      np.sort(np.asarray(idx)))
+
+
+class TestRmwProperties:
+    @given(table_and_indices())
+    @settings(**_small)
+    def test_rmw_add_permutation_invariant(self, ti):
+        """ADD-RMW result is independent of index order (associativity —
+        the legality condition for the paper's reordering)."""
+        table, idx = ti
+        vals = jnp.arange(idx.shape[0], dtype=jnp.float32)
+        a = bulk_rmw(table, idx, vals, op="ADD")
+        perm = np.random.default_rng(0).permutation(idx.shape[0])
+        b = bulk_rmw(table, idx[perm], vals[perm], op="ADD")
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                                   atol=1e-4)
+
+    @given(table_and_indices())
+    @settings(**_small)
+    def test_scatter_then_gather(self, ti):
+        """gather(scatter(t, i, v), unique(i)) returns written values."""
+        table, idx = ti
+        vals = jnp.arange(idx.shape[0], dtype=jnp.float32) + 100.
+        written = bulk_scatter(table, idx, vals)
+        uniq = np.unique(np.asarray(idx))
+        got = np.asarray(bulk_gather(written, jnp.asarray(uniq)))
+        # each unique dest holds the value of its LAST writer
+        ref = np.asarray(table).copy()
+        for i, v in zip(np.asarray(idx), np.asarray(vals)):
+            ref[i] = v
+        np.testing.assert_array_equal(got, ref[uniq])
+
+
+class TestPlanProperties:
+    @given(table_and_indices(), st.sampled_from([16, 64, 128]),
+           st.sampled_from([8, 32]))
+    @settings(**_small)
+    def test_plan_covers_all_indices(self, ti, block_rows, lanes):
+        """Every sorted index appears exactly once at a valid plan slot,
+        inside its own block."""
+        _, idx = ti
+        sidx = jnp.sort(idx)
+        n_rows = int(np.asarray(idx).max()) + 1
+        n_pad = -(-n_rows // block_rows) * block_rows
+        plan = make_row_table_plan(sidx, n_rows=n_pad,
+                                   block_rows=block_rows, lanes=lanes)
+        valid = np.asarray(plan.valid)
+        src = np.asarray(plan.src_pos)[valid]
+        assert sorted(src.tolist()) == list(range(idx.shape[0]))
+        rows = (np.asarray(plan.tile_block)[:, None] * block_rows
+                + np.asarray(plan.offsets))[valid]
+        # reconstruct: rows at src positions == sorted idx
+        recon = np.zeros(idx.shape[0], np.int64)
+        recon[src] = rows
+        np.testing.assert_array_equal(recon, np.asarray(sidx))
+
+
+class TestRangeFuserProperties:
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 64))
+    @settings(**_small)
+    def test_matches_python_loop(self, seed, n):
+        rng = np.random.default_rng(seed)
+        lo = rng.integers(0, 50, size=n).astype(np.int32)
+        lens = rng.integers(0, 6, size=n).astype(np.int32)
+        hi = lo + lens
+        cap = int(lens.sum()) + 8
+        outer, inner, total = fuse_ranges(jnp.asarray(lo), jnp.asarray(hi),
+                                          capacity=cap)
+        ref_o, ref_i = [], []
+        for i in range(n):
+            for j in range(lo[i], hi[i]):
+                ref_o.append(i)
+                ref_i.append(j)
+        assert int(total) == len(ref_o)
+        np.testing.assert_array_equal(np.asarray(outer)[:len(ref_o)], ref_o)
+        np.testing.assert_array_equal(np.asarray(inner)[:len(ref_i)], ref_i)
