@@ -25,7 +25,12 @@ def time_fn(fn, *args, iters: int = 5, warmup: int = 2, **kw):
     return float(np.median(ts))
 
 
+RESULTS = []  # (name, us, derived) rows of the current run (see run.py --json)
+
+
 def emit(name: str, us: float, derived: str = ""):
+    RESULTS.append({"name": name, "us_per_call": round(us, 1),
+                    "derived": derived})
     print(f"{name},{us:.1f},{derived}", flush=True)
 
 

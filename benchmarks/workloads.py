@@ -1,6 +1,7 @@
 """Paper Fig. 9/10 analogue: end-to-end workload kernels where the engine is
 integrated — embedding backward (vocab-grad RMW), MoE dispatch+combine, and
-paged KV-cache gather — engine vs naive, plus Table-1 compiled patterns."""
+paged KV-cache gather — engine vs naive, plus the Table-1 conformance
+patterns (shared registry with tests/test_conformance.py)."""
 from __future__ import annotations
 
 from functools import partial
@@ -11,10 +12,12 @@ import numpy as np
 
 from benchmarks.common import emit, make_indices, time_fn
 from repro.configs import get_config
-from repro.core import bulk_rmw
+from repro.core import Engine, bulk_rmw, compile_pattern
+from repro.core.compiler import _round_up
 from repro.models import build_model
 from repro.models import moe as M
 from repro.serve import kv_cache as KV
+from repro.testing import build_conformance, conformance_names
 
 
 def run():
@@ -70,3 +73,30 @@ def run():
     lossfn = jax.jit(jax.value_and_grad(model.loss))
     t = time_fn(lossfn, params, batch)
     emit("smollm_reduced_train_step", t, "engine-backed embedding bwd")
+
+    # --- Table-1 conformance patterns, engine vs naive ---------------------
+    # Same registry the differential tests verify against the NumPy oracle,
+    # so the timed surface is by construction the verified surface.
+    # Compile once per case outside the timed loop so only per-tile
+    # execution is measured, not Python codegen overhead.
+    TILE = 4096
+    for name in conformance_names():
+        case = build_conformance(name)
+        prog, _ = compile_pattern(case.pattern, tile_size=TILE)
+        env0 = {k: jnp.asarray(v) for k, v in case.env.items()}
+        env0["__iota__"] = jnp.arange(_round_up(case.n, TILE),
+                                      dtype=jnp.int32)
+
+        def step(engine, env0=env0, prog=prog, n=case.n):
+            env = dict(env0)
+            for base in range(0, n, TILE):
+                count = min(TILE, n - base)
+                env, _ = engine.run(prog, env, {
+                    "tile_base": base, "N": count, "tile_end": base + count})
+            return env
+        t_e = time_fn(step, Engine(tile_size=TILE, optimize=True),
+                      iters=3, warmup=1)
+        t_n = time_fn(step, Engine(tile_size=TILE, optimize=False),
+                      iters=3, warmup=1)
+        emit(f"table1_{name}_naive", t_n, f"n={case.n}")
+        emit(f"table1_{name}_engine", t_e, f"speedup={t_n / t_e:.2f}x")

@@ -1,0 +1,35 @@
+"""Root pytest config: deterministic PRNG seeding and slow-test gating.
+
+``slow``-marked tests are deselected by default (tier-1 wall-time budget);
+run them with ``pytest --runslow`` or ``-m slow``.
+"""
+import random
+
+import numpy as np
+import pytest
+
+
+def pytest_addoption(parser):
+    parser.addoption("--runslow", action="store_true", default=False,
+                     help="run tests marked @pytest.mark.slow")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow"):
+        return
+    if "slow" in (config.getoption("-m") or ""):
+        return  # user selected by marker explicitly
+    skip_slow = pytest.mark.skip(reason="slow: use --runslow (or -m slow)")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip_slow)
+
+
+@pytest.fixture(autouse=True)
+def _deterministic_seeds():
+    """Seed the global NumPy / stdlib PRNGs per test. JAX keys are explicit
+    everywhere in this repo; tests that want local streams use
+    ``np.random.default_rng(seed)`` which is unaffected."""
+    np.random.seed(0)
+    random.seed(0)
+    yield

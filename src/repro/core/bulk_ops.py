@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import reorder
-from repro.core.isa import rmw_identity
+from repro.core.isa import alu_apply, rmw_identity
 
 _SEG_OPS = {
     "ADD": jax.ops.segment_sum,
@@ -29,6 +29,37 @@ _SEG_OPS = {
     "MIN": jax.ops.segment_min,
     "MUL": jax.ops.segment_prod,
 }
+
+_BITWISE_OPS = ("AND", "OR", "XOR")
+
+
+def _segment_bitwise(vals, seg, num_segments: int, op: str):
+    """Per-bit segment reduction for AND/OR/XOR (integer dtypes only).
+
+    AND per bit is a segment-min, OR a segment-max, XOR a parity sum; empty
+    segments come out as the op identity, mirroring ``rmw_identity``.
+    """
+    dt = jnp.dtype(vals.dtype)
+    if not jnp.issubdtype(dt, jnp.integer):
+        raise ValueError(f"bitwise RMW {op} requires an integer table, "
+                         f"got {dt}")
+    nbits = jnp.iinfo(dt).bits
+    udt = jnp.dtype(f"uint{nbits}")
+    u = vals.astype(udt)
+    out = jnp.zeros((num_segments,) + vals.shape[1:], udt)
+    for b in range(nbits):
+        bit = (u >> b) & jnp.asarray(1, udt)
+        if op == "AND":
+            rb = jnp.minimum(jax.ops.segment_min(
+                bit, seg, num_segments=num_segments), 1)  # empty -> 1
+        elif op == "OR":
+            rb = jax.ops.segment_max(bit, seg, num_segments=num_segments)
+        else:  # XOR: parity of set bits
+            rb = jax.ops.segment_sum(
+                bit.astype(jnp.uint32), seg,
+                num_segments=num_segments) & 1
+        out = out | (rb.astype(udt) << b)
+    return out.astype(dt)
 
 
 def _maybe_kernel_gather(table, plan, *, interpret):
@@ -96,6 +127,8 @@ def bulk_scatter(table: jax.Array, idx: jax.Array, values: jax.Array, *,
                  cond: jax.Array | None = None,
                  optimize: bool = True) -> jax.Array:
     idx = idx.astype(jnp.int32).reshape(-1)
+    if idx.shape[0] == 0:
+        return table
     values = values.reshape((idx.shape[0],) + table.shape[1:])
     if cond is not None:
         cond = cond.reshape(-1)
@@ -129,13 +162,15 @@ def bulk_rmw(table: jax.Array, idx: jax.Array, values: jax.Array, *,
              interpret: bool = True) -> jax.Array:
     """A[B[i]] op= C[i]; op must be associative+commutative (RMW_OPS)."""
     idx = idx.astype(jnp.int32).reshape(-1)
+    if idx.shape[0] == 0:
+        return table
     values = values.reshape((idx.shape[0],) + table.shape[1:])
     ident = rmw_identity(op, table.dtype)
     if cond is not None:
         cond = cond.reshape(-1)
         cshape = (-1,) + (1,) * (values.ndim - 1)
         values = jnp.where(cond.reshape(cshape), values, ident)
-    if not optimize:
+    if not optimize and op not in _BITWISE_OPS:
         # naive baseline: XLA scatter with duplicate indices (serialized on
         # real hardware; the paper's RMW-Atomic analogue).
         if op == "ADD":
@@ -147,6 +182,8 @@ def bulk_rmw(table: jax.Array, idx: jax.Array, values: jax.Array, *,
         if op == "MUL":
             return table.at[idx].multiply(values)
         raise ValueError(op)
+    # Bitwise ops have no XLA scatter mode, so both optimize settings take
+    # the segment path below — exact either way (associative + commutative).
 
     # (1) reorder: sort by destination
     sidx, perm = reorder.sort_indices(idx)
@@ -158,8 +195,8 @@ def bulk_rmw(table: jax.Array, idx: jax.Array, values: jax.Array, *,
     nseg = idx.shape[0]  # static bound
     if op in _SEG_OPS:
         packed = _SEG_OPS[op](svals, seg, num_segments=nseg)
-    else:  # AND / OR / XOR via bit-tricks over segments
-        raise NotImplementedError(f"segmented {op}")
+    else:  # AND / OR / XOR via per-bit segment reductions
+        packed = _segment_bitwise(svals, seg, nseg, op)
     # destination row of each segment (empty segments -> dtype-min -> routed
     # out of range and dropped by the scatter).
     seg_dest = jax.ops.segment_max(sidx, seg, num_segments=nseg)
@@ -171,6 +208,11 @@ def bulk_rmw(table: jax.Array, idx: jax.Array, values: jax.Array, *,
                                   op=op, block_rows=block_rows, lanes=lanes,
                                   interpret=interpret)
     # (3) unique scatter — every destination written exactly once.
+    if op in _BITWISE_OPS:
+        # no bitwise scatter mode in XLA: gather-modify-set (dests unique)
+        cur = table[jnp.clip(seg_dest, 0, table.shape[0] - 1)]
+        new = alu_apply(op, cur, packed)
+        return table.at[seg_dest].set(new, mode="drop", unique_indices=True)
     if op == "ADD":
         return table.at[seg_dest].add(packed, mode="drop",
                                       unique_indices=True)

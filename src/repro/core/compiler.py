@@ -250,9 +250,14 @@ def compile_pattern(p: Pattern, *, tile_size: int = 16384,
         outer_t, inner_t = em.fresh("outer"), em.fresh("inner")
         em.emit(isa.RNG(outer_t, inner_t, lo_t, hi_t, rs1=-1, tc=guard))
         em.iter_tile[rl.var] = inner_t
-        em.iter_tile["i"] = outer_t      # downstream i refs follow fusion
         info["iteration_tile"] = (outer_t, inner_t)
         guard = outer_t + "__mask"       # fused-stream validity mask
+        # RNG emits tile-local outer lane numbers; downstream `i` references
+        # need the global induction value, so rebase by the tile offset.
+        i_fused = em.fresh("ifused")
+        em.emit(isa.ALUS("i32", "ADD", i_fused, outer_t, rs="tile_base",
+                         tc=guard))
+        em.iter_tile["i"] = i_fused
 
     # Pass 2+3: per access — condition tile, hoist/sink
     for a in p.accesses:

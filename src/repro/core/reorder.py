@@ -42,6 +42,10 @@ def coalesce(idx: jax.Array, *, size: int | None = None):
     padded (with its max value) to a static ``size`` (default: len(idx)).
     """
     size = int(size if size is not None else idx.shape[0])
+    if idx.shape[0] == 0:
+        # empty stream: nothing to coalesce (jnp.max below would fail)
+        return (jnp.zeros((size,), idx.dtype), jnp.zeros((0,), jnp.int32),
+                jnp.zeros((), jnp.int32))
     # pad with the max so the padded array stays sorted (jnp.unique's default
     # fill is the min, which would break the row-table plan's sort invariant)
     unique_idx, inverse = jnp.unique(
@@ -119,6 +123,14 @@ def make_row_table_plan(sorted_idx: jax.Array, *, n_rows: int,
     """
     T = sorted_idx.shape[0]
     num_blocks = _ceil_div(n_rows, block_rows)
+    if T == 0:
+        z = jnp.zeros((0, lanes), jnp.int32)
+        return RowTablePlan(
+            tile_block=jnp.zeros((0,), jnp.int32),
+            tile_first=jnp.zeros((0,), bool),
+            offsets=z, src_pos=z, valid=jnp.zeros((0, lanes), bool),
+            n_tiles=jnp.zeros((), jnp.int32), block_rows=block_rows,
+            lanes=lanes, num_blocks=num_blocks)
     max_tiles = _ceil_div(T, lanes) + min(num_blocks, T)
 
     blk = (sorted_idx // block_rows).astype(jnp.int32)

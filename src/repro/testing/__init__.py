@@ -1,0 +1,29 @@
+"""repro.testing — differential-testing subsystem.
+
+  oracle       pure-NumPy ISA interpreter + Pattern loop-nest evaluator
+  fuzzer       seeded generator of legal Patterns + environments
+  harness      engine-config-matrix parity checks against the oracles
+  conformance  the paper's 12 Table-1 benchmark kernels as Patterns
+
+Quick parity check for any Pattern (the one-liner future refactors use):
+
+    from repro.testing import harness
+    harness.check_pattern_parity(pattern, env, n=n)
+"""
+from repro.testing.conformance import all_names as conformance_names
+from repro.testing.conformance import build as build_conformance
+from repro.testing.fuzzer import FuzzCase, generate_case
+from repro.testing.harness import (CONFIG_MATRIX, EAGER_CONFIGS,
+                                   JIT_CONFIGS, EngineConfig, ParityError,
+                                   check_case_parity, check_pattern_parity,
+                                   rotating_configs, run_engine_tiled)
+from repro.testing.oracle import (NP_DTYPES, OracleEngine, eval_expr,
+                                  oracle_run_tiled, run_pattern)
+
+__all__ = [
+    "conformance_names", "build_conformance", "FuzzCase", "generate_case",
+    "CONFIG_MATRIX", "EAGER_CONFIGS", "JIT_CONFIGS", "EngineConfig",
+    "ParityError", "check_case_parity", "check_pattern_parity",
+    "rotating_configs", "run_engine_tiled", "NP_DTYPES", "OracleEngine",
+    "eval_expr", "oracle_run_tiled", "run_pattern",
+]

@@ -1,0 +1,193 @@
+"""Differential-parity harness: engine config matrix vs the NumPy oracle.
+
+``check_pattern_parity`` compiles a Pattern once per tile size, runs it
+through engine configurations (optimize on/off × Pallas kernel on/off ×
+jitted/eager × tile size), and asserts agreement with both oracles:
+
+  * ISA-level: the ``OracleEngine`` interpreting the *same* compiled
+    program tile by tile — every env region and every scratchpad tile must
+    match (bit-exact for integers, allclose for floats, whose bulk RMW
+    reductions the engine legally reorders);
+  * source-level: the pure loop-nest evaluation of the Pattern itself —
+    catching compiler bugs that both engine and ISA oracle would faithfully
+    execute. Skipped per-config when the fused range stream overflows that
+    tile size's static RNG capacity (the engine truncates by design; the
+    ISA oracle mirrors the truncation, the source loop cannot).
+
+Any divergence raises ``ParityError`` carrying the config and region/tile
+name — the one-line reproducer for future perf/refactor PRs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Sequence
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import compiler
+from repro.core.engine import Engine
+from repro.testing import oracle
+from repro.testing.fuzzer import FuzzCase
+
+TILE_SIZES = (64, 1024, 16384)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    optimize: bool
+    use_kernel: bool
+    jit: bool
+    tile_size: int
+
+    @property
+    def label(self) -> str:
+        return (f"opt={int(self.optimize)} kern={int(self.use_kernel)} "
+                f"jit={int(self.jit)} tile={self.tile_size}")
+
+
+CONFIG_MATRIX = tuple(
+    EngineConfig(optimize=o, use_kernel=k, jit=j, tile_size=t)
+    for t in TILE_SIZES
+    for o in (True, False)
+    for k in (False, True)
+    for j in (False, True))
+
+EAGER_CONFIGS = tuple(c for c in CONFIG_MATRIX if not c.jit)
+JIT_CONFIGS = tuple(c for c in CONFIG_MATRIX if c.jit)
+
+
+class ParityError(AssertionError):
+    pass
+
+
+def run_engine_tiled(p: compiler.Pattern, env: Mapping, *, n: int,
+                     config: EngineConfig, extra_regs=None):
+    """Mirror of ``compiler.run_tiled`` with jit support; returns
+    (env, spd_last, info) with everything as NumPy."""
+    eng = Engine(tile_size=config.tile_size, optimize=config.optimize,
+                 use_kernel=config.use_kernel)
+    prog, info = compiler.compile_pattern(p, tile_size=config.tile_size)
+    jenv = {k: jnp.asarray(v) for k, v in env.items()}
+    jenv["__iota__"] = jnp.arange(
+        compiler._round_up(n, config.tile_size), dtype=jnp.int32)
+    step = eng.jit_run(prog) if config.jit else \
+        (lambda e, r, s: eng.run(prog, e, r, s))
+    spd_last = {}
+    for base in range(0, n, config.tile_size):
+        count = min(config.tile_size, n - base)
+        regs = {"tile_base": base, "N": count, "tile_end": base + count}
+        regs.update(extra_regs or {})
+        jenv, spd_last = step(jenv, regs, {})
+    jenv.pop("__iota__")
+    out_env = {k: np.asarray(v) for k, v in jenv.items()}
+    out_spd = {k: np.asarray(v) for k, v in spd_last.items()}
+    return out_env, out_spd, info
+
+
+def _assert_match(what: str, got, want, *, rtol: float, atol: float):
+    got = np.asarray(got)
+    want = np.asarray(want)
+    if got.shape != want.shape:
+        raise ParityError(f"{what}: shape {got.shape} != {want.shape}")
+    if np.issubdtype(np.asarray(want).dtype, np.floating) or \
+            want.dtype == oracle.NP_DTYPES["bf16"]:
+        try:
+            np.testing.assert_allclose(
+                got.astype(np.float64), want.astype(np.float64),
+                rtol=rtol, atol=atol)
+        except AssertionError as e:
+            raise ParityError(f"{what}: {e}") from None
+    else:
+        if not np.array_equal(got, want):
+            bad = np.flatnonzero(
+                np.asarray(got != want).reshape(got.shape[0], -1).any(1))
+            raise ParityError(
+                f"{what}: int mismatch at rows {bad[:8]} "
+                f"(got {got[bad[:3]]}, want {want[bad[:3]]})")
+
+
+def check_pattern_parity(p: compiler.Pattern, env: Mapping, *, n: int,
+                         configs: Sequence[EngineConfig] = EAGER_CONFIGS,
+                         check_source: bool = True,
+                         max_tile_fill=None,
+                         extra_regs=None,
+                         rtol: float = 1e-4, atol: float = 1e-5) -> int:
+    """Run ``p`` through every config and compare against both oracles.
+
+    ``max_tile_fill``: optional callable tile_size -> worst-case fused
+    stream length (see ``FuzzCase.max_tile_fill``); used to detect RNG
+    capacity truncation, which disables the source-level check only.
+    Returns the number of (config, oracle) comparisons performed.
+    """
+    checked = 0
+    src_env = src_loads = None
+    if check_source:
+        src_env, src_loads = oracle.run_pattern(
+            p, env, n=n, extra_regs=extra_regs)
+    isa_cache: Dict[int, tuple] = {}
+    for cfg in configs:
+        if cfg.tile_size not in isa_cache:
+            isa_cache[cfg.tile_size] = oracle.oracle_run_tiled(
+                p, env, n=n, tile_size=cfg.tile_size, extra_regs=extra_regs)
+        oenv, ospd, _ = isa_cache[cfg.tile_size]
+        genv, gspd, info = run_engine_tiled(
+            p, env, n=n, config=cfg, extra_regs=extra_regs)
+
+        # --- ISA-level parity: env + every scratchpad tile ---------------
+        for name in oenv:
+            _assert_match(f"[{cfg.label}] env[{name}] vs ISA oracle",
+                          genv[name], oenv[name], rtol=rtol, atol=atol)
+            checked += 1
+        for name in ospd:
+            _assert_match(f"[{cfg.label}] spd[{name}] vs ISA oracle",
+                          gspd[name], ospd[name], rtol=rtol, atol=atol)
+
+        # --- source-level parity: written regions --------------------------
+        if check_source:
+            truncated = (p.range_loop is not None and max_tile_fill
+                         is not None
+                         and max_tile_fill(cfg.tile_size) > cfg.tile_size)
+            if not truncated:
+                for name in src_env:
+                    _assert_match(
+                        f"[{cfg.label}] env[{name}] vs source oracle",
+                        genv[name], src_env[name], rtol=rtol, atol=atol)
+                    checked += 1
+                if p.range_loop is None:
+                    # last-tile load tiles vs the tail of the source stream
+                    last = n - (n - 1) // cfg.tile_size * cfg.tile_size
+                    for base_name, tile_name in info["loads"].items():
+                        got = gspd[tile_name][:last]
+                        want = src_loads[base_name][-last:]
+                        _assert_match(
+                            f"[{cfg.label}] loads[{base_name}] vs source",
+                            got, want, rtol=rtol, atol=atol)
+                        checked += 1
+    return checked
+
+
+def check_case_parity(case: FuzzCase,
+                      configs: Sequence[EngineConfig] = EAGER_CONFIGS,
+                      **kw) -> int:
+    return check_pattern_parity(
+        case.pattern, case.env, n=case.n, configs=configs,
+        max_tile_fill=case.max_tile_fill, **kw)
+
+
+def rotating_configs(seed: int, *, n_eager: int = 2,
+                     jit_every: int = 8) -> tuple:
+    """Deterministic per-seed config subset that covers the full matrix
+    across a corpus: ``n_eager`` eager configs round-robin, plus one jitted
+    config every ``jit_every`` seeds."""
+    cfgs = [EAGER_CONFIGS[(seed + k * 5) % len(EAGER_CONFIGS)]
+            for k in range(n_eager)]
+    if seed % jit_every == 0:
+        cfgs.append(JIT_CONFIGS[(seed // jit_every) % len(JIT_CONFIGS)])
+    # dedup, keep order
+    seen, out = set(), []
+    for c in cfgs:
+        if c not in seen:
+            seen.add(c)
+            out.append(c)
+    return tuple(out)

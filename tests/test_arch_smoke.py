@@ -14,7 +14,11 @@ from repro.models import build_model
 B, S = 2, 32
 
 
-@pytest.fixture(scope="module", params=ARCH_IDS)
+_PARAMS = [pytest.param(a, marks=pytest.mark.slow)
+           if a == "jamba-1.5-large-398b" else a for a in ARCH_IDS]
+
+
+@pytest.fixture(scope="module", params=_PARAMS)
 def arch_setup(request):
     cfg = get_config(request.param).reduced()
     model = build_model(cfg)

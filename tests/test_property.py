@@ -1,7 +1,14 @@
-"""Hypothesis property tests on the engine's invariants."""
+"""Hypothesis property tests on the engine's invariants.
+
+Requires the optional ``hypothesis`` dependency (requirements-dev.txt);
+collection skips cleanly on bare environments.
+"""
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (bulk_gather, bulk_rmw, bulk_scatter, coalesce,
                         fuse_ranges, make_row_table_plan, sort_indices)

@@ -1,0 +1,114 @@
+"""Edge cases for reorder.coalesce / make_row_table_plan (satellite of the
+differential-testing PR): empty streams, all-duplicates, partial last
+blocks, and n_unique when the max value is itself duplicated."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (bulk_gather, bulk_rmw, bulk_scatter, coalesce,
+                        make_row_table_plan)
+from repro.core.isa import RMW_OPS
+from repro.kernels.gather import ops as gops
+
+
+class TestCoalesceEdges:
+    def test_empty_stream(self):
+        uniq, inv, n_u = coalesce(jnp.zeros((0,), jnp.int32))
+        assert uniq.shape == (0,)
+        assert inv.shape == (0,)
+        assert int(n_u) == 0
+
+    def test_empty_stream_padded(self):
+        uniq, inv, n_u = coalesce(jnp.zeros((0,), jnp.int32), size=4)
+        assert uniq.shape == (4,)
+        assert int(n_u) == 0
+
+    def test_all_duplicates(self):
+        idx = jnp.full((16,), 7, jnp.int32)
+        uniq, inv, n_u = coalesce(idx)
+        assert int(n_u) == 1
+        np.testing.assert_array_equal(np.asarray(uniq), [7] * 16)
+        np.testing.assert_array_equal(np.asarray(uniq)[np.asarray(inv)],
+                                      np.asarray(idx))
+
+    def test_n_unique_with_duplicated_max(self):
+        # the pad uses the max value; a duplicated max must not inflate n_u
+        idx = jnp.asarray([5, 3, 5, 5, 1], jnp.int32)
+        uniq, inv, n_u = coalesce(idx)
+        assert int(n_u) == 3
+        u = np.asarray(uniq)
+        assert (np.diff(u) >= 0).all()
+        np.testing.assert_array_equal(u[np.asarray(inv)], np.asarray(idx))
+
+    def test_single_element(self):
+        uniq, inv, n_u = coalesce(jnp.asarray([9], jnp.int32))
+        assert int(n_u) == 1
+        np.testing.assert_array_equal(np.asarray(uniq), [9])
+
+
+class TestEmptyBulkOps:
+    def test_empty_scatter_is_identity(self):
+        t = jnp.arange(4.0)
+        e = jnp.zeros((0,), jnp.int32)
+        for optimize in (True, False):
+            out = bulk_scatter(t, e, jnp.zeros((0,), jnp.float32),
+                               optimize=optimize)
+            np.testing.assert_array_equal(np.asarray(out), np.arange(4.0))
+
+    def test_empty_rmw_is_identity_all_ops(self):
+        t = jnp.arange(8, dtype=jnp.int32)
+        e = jnp.zeros((0,), jnp.int32)
+        for op in RMW_OPS:
+            for optimize in (True, False):
+                out = bulk_rmw(t, e, e, op=op, optimize=optimize)
+                np.testing.assert_array_equal(np.asarray(out),
+                                              np.arange(8)), (op, optimize)
+
+
+class TestRowTablePlanEdges:
+    def test_empty_stream_plan(self):
+        plan = make_row_table_plan(jnp.zeros((0,), jnp.int32), n_rows=128,
+                                   block_rows=32, lanes=8)
+        assert plan.num_tiles == 0
+        assert int(plan.n_tiles) == 0
+
+    def test_empty_stream_gather(self):
+        table = jnp.arange(64, dtype=jnp.float32).reshape(16, 4)
+        out = bulk_gather(table, jnp.zeros((0,), jnp.int32),
+                          use_kernel=False)
+        assert out.shape == (0, 4)
+
+    def test_all_duplicates_single_tile(self):
+        idx = jnp.full((10,), 3, jnp.int32)
+        plan = make_row_table_plan(idx, n_rows=64, block_rows=16, lanes=16)
+        assert int(plan.n_tiles) == 1
+        assert int(plan.tile_block[0]) == 0
+        offs = np.asarray(plan.offsets)[0][np.asarray(plan.valid)[0]]
+        np.testing.assert_array_equal(offs, [3] * 10)
+
+    def test_last_partial_block(self):
+        # n_rows=70, block_rows=32 -> last block holds rows [64, 70)
+        idx = jnp.asarray([64, 65, 69, 69], jnp.int32)
+        plan = make_row_table_plan(idx, n_rows=70, block_rows=32, lanes=4)
+        assert int(plan.n_tiles) == 1
+        assert int(plan.tile_block[0]) == 2
+        offs = np.asarray(plan.offsets)[0][np.asarray(plan.valid)[0]]
+        np.testing.assert_array_equal(offs, [0, 1, 5, 5])
+
+    def test_partial_block_kernel_gather_matches(self):
+        rng = np.random.default_rng(0)
+        table = rng.normal(size=(70, 4)).astype(np.float32)
+        idx = np.sort(rng.integers(60, 70, size=12)).astype(np.int32)
+        plan = make_row_table_plan(jnp.asarray(idx), n_rows=70,
+                                   block_rows=32, lanes=4)
+        packed = gops.row_table_gather(jnp.asarray(table), plan,
+                                       interpret=True)
+        got = np.asarray(packed)[np.asarray(plan.valid).reshape(-1)]
+        np.testing.assert_allclose(got, table[idx], rtol=1e-6)
+
+    def test_plan_serves_every_position(self):
+        rng = np.random.default_rng(1)
+        idx = np.sort(rng.integers(0, 100, size=57)).astype(np.int32)
+        plan = make_row_table_plan(jnp.asarray(idx), n_rows=100,
+                                   block_rows=16, lanes=8)
+        src = np.asarray(plan.src_pos)[np.asarray(plan.valid)]
+        np.testing.assert_array_equal(np.sort(src), np.arange(57))
