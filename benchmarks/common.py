@@ -11,8 +11,14 @@ import jax
 import numpy as np
 
 
-def time_fn(fn, *args, iters: int = 5, warmup: int = 2, **kw):
-    """Median wall-time (us) of a jitted callable."""
+def time_fn(fn, *args, iters: int = 5, warmup: int = 2, agg=np.median,
+            **kw):
+    """Aggregated wall-time (us) of a jitted callable.
+
+    ``agg`` picks the estimator: median (default) for stable single-op
+    timings, ``min`` for ratio gates that must be robust to CI load spikes
+    (min-of-N is the classic noise-floor estimator).
+    """
     for _ in range(warmup):
         out = fn(*args, **kw)
         jax.block_until_ready(out)
@@ -22,7 +28,7 @@ def time_fn(fn, *args, iters: int = 5, warmup: int = 2, **kw):
         out = fn(*args, **kw)
         jax.block_until_ready(out)
         ts.append((time.perf_counter() - t0) * 1e6)
-    return float(np.median(ts))
+    return float(agg(ts))
 
 
 RESULTS = []  # (name, us, derived) rows of the current run (see run.py --json)

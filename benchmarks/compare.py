@@ -1,0 +1,119 @@
+"""Bench-regression gate: diff fresh BENCH_*.json against committed
+snapshots and fail on real throughput regressions.
+
+  PYTHONPATH=src python -m benchmarks.compare \\
+      [--fresh .] [--baseline benchmarks/snapshots] [--threshold 0.25]
+
+Two row classes are gated:
+
+  * ratio rows — rows whose ``derived`` carries ``gate_ratio=<x>`` (e.g.
+    the scheduler's batched-vs-sequential speedup). These compare the
+    *ratio*, which is machine-independent: FAIL when
+    ``fresh_ratio < baseline_ratio * (1 - threshold)``.
+  * wall-time rows — rows whose name matches ``--filter`` (default:
+    ``throughput``). These compare absolute us_per_call: FAIL when
+    ``fresh_us > baseline_us * (1 + wall_slack)``. Absolute CPU timings
+    vary across runners (a shared CI box can easily be 2-3x slower than
+    the machine that recorded the snapshot), so the slack is deliberately
+    loose (default 4.0, i.e. 5x) — the ratio rows are the precise gate;
+    the wall-time check only catches order-of-magnitude cliffs.
+
+Rows present in the baseline but missing fresh (renamed/removed) are
+reported as warnings, not failures — refreshing the snapshot alongside a
+rename is the documented workflow (run ``benchmarks.run <mod> --json`` and
+copy the file into benchmarks/snapshots/).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from pathlib import Path
+
+_RATIO = re.compile(r"gate_ratio=([0-9.]+)")
+
+
+def _load(path: Path) -> dict:
+    rows = {}
+    data = json.loads(path.read_text())
+    for row in data.get("results", []):
+        rows[row["name"]] = row
+    return rows
+
+
+def _ratio_of(row: dict):
+    m = _RATIO.search(row.get("derived", ""))
+    return float(m.group(1)) if m else None
+
+
+def compare_files(fresh: Path, base: Path, *, threshold: float,
+                  wall_slack: float, name_filter: str):
+    """Yields (level, message) pairs; level is 'fail' | 'warn' | 'ok'."""
+    frows, brows = _load(fresh), _load(base)
+    pat = re.compile(name_filter)
+    for name, brow in brows.items():
+        frow = frows.get(name)
+        if frow is None:
+            yield ("warn", f"{base.name}: row {name!r} missing from fresh "
+                   "run (renamed? refresh the snapshot)")
+            continue
+        bratio, fratio = _ratio_of(brow), _ratio_of(frow)
+        if bratio is not None:
+            if fratio is None:
+                yield ("warn", f"{name}: baseline has gate_ratio, fresh "
+                       "does not")
+            elif fratio < bratio * (1 - threshold):
+                yield ("fail", f"{name}: gate_ratio {fratio:.2f} < "
+                       f"{bratio:.2f} * (1-{threshold}) — throughput "
+                       "regression")
+            else:
+                yield ("ok", f"{name}: gate_ratio {fratio:.2f} "
+                       f"(baseline {bratio:.2f})")
+            continue
+        if pat.search(name):
+            fus, bus = frow["us_per_call"], brow["us_per_call"]
+            if bus > 0 and fus > bus * (1 + wall_slack):
+                yield ("fail", f"{name}: {fus:.0f}us > {bus:.0f}us * "
+                       f"(1+{wall_slack}) — wall-time cliff")
+            else:
+                yield ("ok", f"{name}: {fus:.0f}us (baseline {bus:.0f}us)")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fresh", default=".", type=Path,
+                    help="directory holding the fresh BENCH_*.json files")
+    ap.add_argument("--baseline", default=Path("benchmarks/snapshots"),
+                    type=Path, help="directory with committed snapshots")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max fractional gate_ratio drop before failing")
+    ap.add_argument("--wall-slack", type=float, default=4.0,
+                    help="fractional absolute-time slack for wall rows")
+    ap.add_argument("--filter", default="throughput",
+                    help="regex of wall-time row names to gate")
+    args = ap.parse_args(argv)
+
+    failures = 0
+    compared = 0
+    for base in sorted(args.baseline.glob("BENCH_*.json")):
+        fresh = args.fresh / base.name
+        if not fresh.exists():
+            print(f"WARN {base.name}: no fresh run found in {args.fresh}")
+            continue
+        compared += 1
+        for level, msg in compare_files(
+                fresh, base, threshold=args.threshold,
+                wall_slack=args.wall_slack, name_filter=args.filter):
+            tag = {"fail": "FAIL", "warn": "WARN", "ok": "  ok"}[level]
+            print(f"{tag} {msg}")
+            failures += (level == "fail")
+    if compared == 0:
+        print(f"WARN: no snapshot/fresh pairs found "
+              f"(baseline={args.baseline})")
+    print(f"\n{compared} file(s) compared, {failures} regression(s)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

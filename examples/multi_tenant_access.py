@@ -1,0 +1,69 @@
+"""Multi-tenant shared access engine: 8 cores, one DX100 frontend.
+
+  PYTHONPATH=src python examples/multi_tenant_access.py
+
+Each "core" compiles the same gather pattern over its own index stream and
+submits asynchronously to the shared AccessService. One flush executes all
+eight programs as a single vmapped XLA call (one trace, ever), reports the
+cross-request coalescing gain on the shared embedding table, and the bulk
+fast path shows the fused fetch: rows wanted by several cores are read once.
+"""
+import numpy as np
+
+from repro.core import Access, Load, Pattern, Var, compile_pattern
+from repro.serve import AccessService
+
+
+def main():
+    rng = np.random.default_rng(0)
+    n_cores, tile, rows = 8, 1024, 4096
+    table = rng.normal(size=(rows,)).astype(np.float32)   # shared region
+
+    pat = Pattern([Access("LD", "T", Load("B", Var("i")), dtype="f32")],
+                  name="emb_gather")
+    prog, info = compile_pattern(pat, tile_size=tile)
+
+    svc = AccessService(tile_size=tile, auto_flush=0)     # manual flush
+    cores = [svc.connect(f"core{c}") for c in range(n_cores)]
+    iota = np.arange(tile, dtype=np.int32)
+
+    tickets, idx_streams = [], []
+    for core in cores:
+        idx = rng.integers(0, rows // 8, size=(tile,)).astype(np.int32)
+        idx_streams.append(idx)
+        env = {"T": table, "B": idx, "__iota__": iota}
+        tickets.append(core.submit(
+            prog, env, {"tile_base": 0, "N": tile, "tile_end": tile}))
+
+    report = svc.flush()
+    g = report.groups[0]
+    print(f"{report.n_programs} programs from {n_cores} cores -> "
+          f"{len(report.groups)} group(s), vmapped={g.vmapped}")
+    print("round-robin order:",
+          " ".join(t for t, _ in report.order[:n_cores]))
+    gain, per, fused = g.cross_coalescing["T"]
+    print(f"cross-request coalescing on shared table: {gain:.2f}x "
+          f"({per} per-core unique rows -> {fused} fused)")
+
+    for c, (core, t, idx) in enumerate(zip(cores, tickets, idx_streams)):
+        _, spd = core.wait(t)
+        np.testing.assert_allclose(
+            np.asarray(spd[info["loads"]["T"]]), table[idx])
+    print("all core results match table[idx]")
+
+    # bulk fast path: fused fetch across tenants
+    t1 = cores[0].submit_gather(table, idx_streams[0])
+    t2 = cores[1].submit_gather(table, idx_streams[1])
+    rep = svc.flush()
+    (gain, per, fused), = rep.gather_coalescing.values()
+    print(f"bulk gather fast path: {per} -> {fused} rows fetched "
+          f"({gain:.2f}x fused dedup)")
+    np.testing.assert_allclose(np.asarray(cores[0].wait(t1)),
+                               table[idx_streams[0]])
+    np.testing.assert_allclose(np.asarray(cores[1].wait(t2)),
+                               table[idx_streams[1]])
+    print("compile cache:", svc.stats["engine"])
+
+
+if __name__ == "__main__":
+    main()

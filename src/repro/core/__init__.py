@@ -13,15 +13,19 @@ from repro.core.bulk_ops import bulk_gather, bulk_rmw, bulk_scatter
 from repro.core.compiler import (Access, BinOp, Compare, LegalityError, Load,
                                  Pattern, RangeLoop, Var, compile_pattern,
                                  run_tiled)
-from repro.core.engine import Engine
+from repro.core.engine import Engine, TracedExecutable, structural_signature
 from repro.core.range_fuser import fuse_ranges
-from repro.core.reorder import (RowTablePlan, coalesce, coalescing_factor,
+from repro.core.reorder import (RowTablePlan, coalesce, coalesce_streams,
+                                coalescing_factor, cross_stream_gain,
                                 make_row_table_plan, sort_indices)
+from repro.core.scheduler import FlushReport, Scheduler, Ticket
 
 __all__ = [
     "isa", "reorder", "Engine", "bulk_gather", "bulk_scatter", "bulk_rmw",
     "fuse_ranges", "compile_pattern", "Pattern", "Access", "Load", "BinOp",
     "Compare", "RangeLoop", "Var", "LegalityError", "run_tiled",
     "RowTablePlan", "coalesce", "coalescing_factor", "make_row_table_plan",
-    "sort_indices",
+    "sort_indices", "coalesce_streams", "cross_stream_gain",
+    "Scheduler", "Ticket", "FlushReport", "TracedExecutable",
+    "structural_signature",
 ]

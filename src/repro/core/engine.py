@@ -12,16 +12,132 @@ Usage:
 `env` holds the memory regions (the paper's main-memory arrays); regions
 written by IST/IRMW come back updated in `out_env`. `spd` is the final
 scratchpad (packed tiles the "cores" read back).
+
+Compile cache: ``Engine.executable(program)`` returns a ``TracedExecutable``
+— a reusable jitted handle cached per *structural signature* (instruction
+stream modulo the display name), so repeat submissions of structurally
+identical programs never re-trace. ``executable(program, batch=k)`` returns
+the ``jax.vmap``-batched variant the scheduler uses to run ``k`` compatible
+programs as one XLA computation. ``Engine.stats`` counts cache traffic.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Dict, Mapping
+import dataclasses
+import functools
+from typing import Dict, Mapping, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import bulk_ops, isa, range_fuser
+
+
+@functools.lru_cache(maxsize=1024)
+def structural_signature(program: isa.AccessProgram) -> tuple:
+    """Hashable structural identity of a program.
+
+    Covers everything that shapes the traced computation — instruction
+    opcodes, operand/tile/region names, immediates and tile size — while
+    excluding the display ``name``. Programs with equal signatures trace to
+    identical XLA graphs (given equal env/reg structure), so they share one
+    compile-cache entry and can be batched lane-wise by the scheduler.
+    """
+    return (program.tile_size,) + tuple(
+        (type(ins).__name__,)
+        + tuple((f.name, getattr(ins, f.name))
+                for f in dataclasses.fields(ins))
+        for ins in program.instrs)
+
+
+class TracedExecutable:
+    """A compile-cached jitted handle for one program structure.
+
+    ``traces`` counts actual (re)traces via a Python side effect inside the
+    traced function — it stays at 1 across any number of same-structure
+    calls, which is the counter the compile-cache tests assert on.
+
+    ``batch=None`` executes one program via ``__call__``; ``batch=k``
+    executes ``k`` programs at once via ``run_batch``: per-program envs and
+    regs go in as pytrees, stacking, the ``jax.vmap`` over lanes AND the
+    per-lane unstacking all happen *inside the single jitted computation* —
+    one XLA dispatch per flush instead of hundreds of eager primitive
+    dispatches (stack/convert/slice), which is where a CPU hot path
+    actually spends its time.
+
+    Regions named in ``shared`` are not stacked: the one resident copy is
+    closed over by the vmapped lane function, so it is broadcast to every
+    lane without replication — the multi-tenant case of N programs reading
+    one table. Shared regions must be read-only in the program (the
+    scheduler guarantees this by excluding IST/IRMW/SST targets).
+    """
+
+    def __init__(self, engine: "Engine", program: isa.AccessProgram,
+                 key: tuple, *, batch: Optional[int] = None,
+                 shared: frozenset = frozenset()):
+        self.engine = engine
+        self.program = program
+        self.key = key
+        self.batch = batch
+        self.shared = frozenset(shared)
+        self.calls = 0
+        self.traces = 0
+
+        def _run(env, regs, spd):
+            self.traces += 1        # fires only while tracing
+            return engine.run(program, env, regs, spd)
+
+        if batch is None:
+            self._fn = jax.jit(_run)
+            return
+
+        def _run_batch(menvs, senv, regs_list, spd):
+            self.traces += 1
+            stacked = {k: jnp.stack([e[k] for e in menvs])
+                       for k in menvs[0]}
+            regs = {k: jnp.asarray([r[k] for r in regs_list])
+                    for k in regs_list[0]}
+
+            def lane(menv, lregs):
+                out_env, out_spd = engine.run(
+                    program, {**menv, **senv}, lregs, spd)
+                for k in senv:          # read-only: drop the pass-through
+                    out_env.pop(k)
+                return out_env, out_spd
+
+            out_env, out_spd = jax.vmap(lane, axis_size=batch)(stacked, regs)
+            # unstack per lane inside the trace: slices compile into the
+            # same computation, so results come back as per-program arrays
+            return tuple(
+                ({k: v[i] for k, v in out_env.items()},
+                 {k: v[i] for k, v in out_spd.items()})
+                for i in range(batch))
+
+        self._batch_fn = jax.jit(_run_batch)
+
+    def __call__(self, env, regs=None, spd=None):
+        if self.batch is not None:
+            raise TypeError("batched executable: use run_batch(envs, regs)")
+        self.calls += 1
+        return self._fn(dict(env), dict(regs or {}), dict(spd or {}))
+
+    def run_batch(self, envs, regs_list, spd=None):
+        """Execute ``batch`` programs: ``envs[i]``/``regs_list[i]`` belong
+        to lane i (shared regions may appear in every env — the first copy
+        is used). Returns a list of per-lane ``(env, spd)`` results, with
+        shared regions merged back in untouched."""
+        if self.batch is None or len(envs) != self.batch:
+            raise TypeError(
+                f"executable compiled for batch={self.batch}, "
+                f"got {len(envs)} envs")
+        self.calls += 1
+        senv = {k: envs[0][k] for k in self.shared}
+        menvs = tuple({k: v for k, v in e.items() if k not in self.shared}
+                      for e in envs)
+        outs = self._batch_fn(menvs, senv, tuple(dict(r) for r in regs_list),
+                              dict(spd or {}))
+        if not self.shared:
+            return list(outs)
+        return [({**oe, **senv}, os) for oe, os in outs]
 
 
 class Engine:
@@ -30,6 +146,35 @@ class Engine:
         self.tile_size = int(tile_size)
         self.optimize = optimize
         self.use_kernel = use_kernel
+        self._cache: Dict[tuple, TracedExecutable] = {}
+        self.stats = {"trace_requests": 0, "trace_misses": 0}
+
+    # -- compile cache -------------------------------------------------------
+    @property
+    def cache_hits(self) -> int:
+        return self.stats["trace_requests"] - self.stats["trace_misses"]
+
+    def executable(self, program: isa.AccessProgram, *,
+                   batch: Optional[int] = None,
+                   shared: frozenset = frozenset()) -> TracedExecutable:
+        """Fetch (or build) the cached jitted executable for ``program``.
+
+        The cache key is the structural signature plus every engine knob
+        that changes lowering (tile size, optimize, kernel routing), the
+        vmap batch width and the shared-region set. Two programs differing
+        only in ``name`` share an entry; jax.jit's own shape cache guards
+        differing env shapes.
+        """
+        key = (structural_signature(program), self.tile_size, self.optimize,
+               self.use_kernel, batch, frozenset(shared))
+        self.stats["trace_requests"] += 1
+        exe = self._cache.get(key)
+        if exe is None:
+            self.stats["trace_misses"] += 1
+            exe = TracedExecutable(self, program, key, batch=batch,
+                                   shared=shared)
+            self._cache[key] = exe
+        return exe
 
     # -- scalar operand resolution (register file) -------------------------
     @staticmethod
@@ -148,8 +293,7 @@ class Engine:
         return env, spd
 
     def jit_run(self, program: isa.AccessProgram):
-        """Compile a program into a reusable jitted callable."""
-        @partial(jax.jit)
-        def fn(env, regs, spd):
-            return self.run(program, env, regs, spd)
-        return fn
+        """Compile (or fetch from the compile cache) a reusable jitted
+        callable — repeat calls with a structurally identical program return
+        the same ``TracedExecutable`` and never re-trace."""
+        return self.executable(program)

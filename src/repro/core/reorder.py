@@ -17,6 +17,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 # ---------------------------------------------------------------------------
@@ -61,6 +62,49 @@ def coalescing_factor(idx: jax.Array) -> jax.Array:
     """#accesses / #unique accesses — the paper's coalescing metric."""
     _, _, n_unique = coalesce(idx)
     return idx.shape[0] / jnp.maximum(n_unique, 1)
+
+
+def coalesce_streams(streams, *, size: int | None = None):
+    """Cross-stream coalescing: one Word-Table pass over many request
+    streams (the shared-accelerator case — N cores gathering from the same
+    region get duplicates deduplicated *across* requests, §2.3/§6.1).
+
+    ``streams``: sequence of 1-D index arrays against one memory region.
+    Returns ``(unique_idx, inverses, n_unique)`` where ``inverses`` is a
+    tuple with ``unique_idx[inverses[k]] == streams[k]`` — each requester
+    reads its lanes back out of the single packed fetch.
+    """
+    streams = [jnp.asarray(s).reshape(-1) for s in streams]
+    lens = [int(s.shape[0]) for s in streams]
+    if not streams or sum(lens) == 0:
+        empty = jnp.zeros((0,), jnp.int32)
+        return (jnp.zeros((int(size or 0),), jnp.int32),
+                tuple(empty for _ in streams), jnp.zeros((), jnp.int32))
+    cat = jnp.concatenate(streams)
+    unique_idx, inverse, n_unique = coalesce(cat, size=size)
+    bounds = np.cumsum([0] + lens)
+    inverses = tuple(inverse[bounds[k]:bounds[k + 1]]
+                     for k in range(len(streams)))
+    return unique_idx, inverses, n_unique
+
+
+def cross_stream_gain(streams) -> tuple:
+    """Cross-request coalescing gain: (sum of per-stream unique counts) /
+    (unique count of the fused stream). 1.0 means batching streams buys no
+    extra dedup; >1 quantifies the traffic the shared engine saves over
+    per-core coalescing — the scheduler's reporting metric.
+    Returns ``(gain, per_stream_unique_total, fused_unique)``.
+
+    Pure NumPy: this is measurement, not execution — keeping it off the
+    device keeps the scheduler's flush hot path free of eager dispatches.
+    """
+    streams = [np.asarray(s).reshape(-1) for s in streams]
+    streams = [s for s in streams if s.shape[0]]
+    if not streams:
+        return 1.0, 0, 0
+    per = sum(np.unique(s).shape[0] for s in streams)
+    fused = np.unique(np.concatenate(streams)).shape[0]
+    return per / max(fused, 1), int(per), int(fused)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,470 @@
+"""Shared multi-tenant access engine: cross-program batching + coalescing.
+
+The paper's defining system property is that one DX100 serves *many* cores
+(Fig. 2): each core posts bulk access programs through MMIO queues and the
+accelerator reorders, interleaves and coalesces accesses *across* the
+outstanding requests. This module is that shared frontend:
+
+  * ``Scheduler.submit`` enqueues an ``AccessProgram`` + env from a logical
+    core (``tenant``) and returns a ``Ticket``; ``poll``/``result`` read the
+    retired env/scratchpad back — the async MMIO submit/poll protocol.
+  * ``flush`` drains the queue in **round-robin tenant order** (fairness:
+    no core starves behind a bulk submitter), groups submissions by
+    **structural signature** (instruction stream + env/reg structure), and
+    executes each group as **one jitted ``jax.vmap`` computation** over
+    stacked tiles — N programs, one XLA dispatch, one trace ever (the
+    engine's compile cache persists across flushes).
+  * ``submit_gather`` is the bulk fast-path where cross-request coalescing
+    is applied *for real*: all pending gathers against the same table are
+    fused into a single ``reorder.coalesce_streams`` fetch, so rows
+    requested by several tenants are read **once** (§2.3 shared-row reuse).
+  * For program groups, the flush report *measures* the same opportunity:
+    statically extractable index streams hitting a shared region are scored
+    with ``reorder.cross_stream_gain`` (reported, not yet fused — results
+    always come from the bit-faithful engine path).
+
+Everything degrades safely: a group whose program vmap cannot trace falls
+back to per-program cached executables, and a group of one skips stacking.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict, deque
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import isa, reorder
+from repro.core.engine import Engine, structural_signature
+
+
+# ---------------------------------------------------------------------------
+# tickets and queue entries
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Ticket:
+    """Handle returned by submit; redeem via ``poll``/``result``."""
+    tid: int
+    tenant: str
+
+
+@dataclasses.dataclass
+class _Submission:
+    ticket: Ticket
+    program: isa.AccessProgram
+    env: Dict
+    regs: Dict
+    group_key: tuple
+    src_ids: Dict      # region -> id() of the array the caller passed in
+    # strong refs to the caller's original objects: keeps the ids above
+    # valid for the submission's lifetime (CPython reuses a freed object's
+    # id, which would otherwise let two different tables alias one group)
+    src_refs: tuple
+
+
+@dataclasses.dataclass
+class _GatherSubmission:
+    ticket: Ticket
+    table: jax.Array
+    idx: jax.Array
+    table_id: int      # id() of the array the caller passed (fusion key)
+    table_ref: object  # strong ref keeping that id valid while queued
+
+
+@dataclasses.dataclass
+class FailedResult:
+    """Stored in place of a result when the owning group's execution
+    raised; ``Scheduler.result`` re-raises ``error``."""
+    error: Exception
+
+
+@dataclasses.dataclass
+class GroupReport:
+    """Per-group execution record of one flush.
+
+    ``cross_coalescing`` maps region -> (cross-request gain, sum of
+    per-request unique counts, fused unique count). It is computed lazily
+    on first access — measurement is pure reporting and must not tax the
+    flush hot path.
+    """
+    n_programs: int
+    program_name: str
+    vmapped: bool               # executed as one vmapped XLA call
+    fell_back: bool             # vmap trace failed -> per-program loop
+    error: Optional[str] = None  # repr of the exception, if the group died
+    _coalescing_thunk: Optional[object] = dataclasses.field(
+        default=None, repr=False)
+    _coalescing: Optional[Dict[str, Tuple[float, int, int]]] = \
+        dataclasses.field(default=None, repr=False)
+
+    @property
+    def cross_coalescing(self) -> Dict[str, Tuple[float, int, int]]:
+        if self._coalescing is None:
+            self._coalescing = (self._coalescing_thunk()
+                                if self._coalescing_thunk else {})
+        return self._coalescing
+
+
+@dataclasses.dataclass
+class FlushReport:
+    order: Tuple[Tuple[str, int], ...]    # (tenant, tid) execution order
+    groups: Tuple[GroupReport, ...]
+    n_programs: int
+    n_gathers: int
+    # table id -> (gain, per-request unique total, fused unique)
+    gather_coalescing: Dict[int, Tuple[float, int, int]]
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+def _leaf_struct(x) -> tuple:
+    x = jnp.asarray(x) if not hasattr(x, "shape") else x
+    return tuple(x.shape), str(x.dtype)
+
+
+def _env_struct(env: Mapping) -> tuple:
+    return tuple(sorted((k,) + _leaf_struct(v) for k, v in env.items()))
+
+
+class Scheduler:
+    """Shared access-engine frontend over one (long-lived) ``Engine``.
+
+    Parameters:
+      engine     : the backing engine; defaults to a fresh one. Long-lived —
+                   its compile cache is what kills per-call re-tracing.
+      max_batch  : cap on programs fused into one vmap group per flush.
+    """
+
+    def __init__(self, engine: Optional[Engine] = None, *,
+                 tile_size: int = 16384, optimize: bool = True,
+                 use_kernel: bool = False, max_batch: int = 32):
+        self.engine = engine if engine is not None else Engine(
+            tile_size=tile_size, optimize=optimize, use_kernel=use_kernel)
+        self.max_batch = int(max_batch)
+        self._queue: List[_Submission] = []
+        self._gather_queue: List[_GatherSubmission] = []
+        self._results: Dict[int, tuple] = {}
+        self._next_tid = 0
+        self._rr_cursor = 0          # rotates the round-robin start tenant
+        self.stats = {"flushes": 0, "programs": 0, "gathers": 0,
+                      "vmap_groups": 0, "vmap_fallbacks": 0,
+                      "singleton_groups": 0, "group_errors": 0}
+
+    # -- submission ----------------------------------------------------------
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue) + len(self._gather_queue)
+
+    def _ticket(self, tenant: str) -> Ticket:
+        t = Ticket(self._next_tid, tenant)
+        self._next_tid += 1
+        return t
+
+    def submit(self, program: isa.AccessProgram, env: Mapping,
+               regs: Mapping | None = None, *,
+               tenant: str = "core0") -> Ticket:
+        """Enqueue one program launch from ``tenant``; returns a Ticket.
+
+        ``env`` maps region names to arrays; ``regs`` holds scalar
+        registers (``tile_base``/``N``/... — python numbers). Execution is
+        deferred to ``flush``.
+        """
+        src_refs = tuple(env.values())   # pin caller objects (id stability)
+        src_ids = {k: id(v) for k, v in env.items()}
+        # keep caller arrays as-is: device transfer happens once, inside the
+        # batched jit dispatch, not as one eager device_put per leaf here
+        env = {k: v if hasattr(v, "shape") else np.asarray(v)
+               for k, v in env.items()}
+        regs = dict(regs or {})
+        key = (structural_signature(program), _env_struct(env),
+               tuple(sorted(regs)))
+        sub = _Submission(self._ticket(tenant), program, env, regs, key,
+                          src_ids, src_refs)
+        self._queue.append(sub)
+        return sub.ticket
+
+    def submit_gather(self, table, idx, *, tenant: str = "core0") -> Ticket:
+        """Bulk fast-path: C = table[idx] with *cross-request* coalescing.
+
+        All pending gathers against the same table object are fused into a
+        single coalesced fetch at flush time; the result for this ticket is
+        the (N,)- or (N, D)-shaped gathered array.
+        """
+        sub = _GatherSubmission(self._ticket(tenant), jnp.asarray(table),
+                                jnp.asarray(idx).astype(jnp.int32),
+                                table_id=id(table), table_ref=table)
+        self._gather_queue.append(sub)
+        return sub.ticket
+
+    # -- retrieval -----------------------------------------------------------
+
+    def poll(self, ticket: Ticket):
+        """Non-blocking: the retired result, a ``FailedResult`` if the
+        owning group's execution raised, or None while still queued."""
+        return self._results.get(ticket.tid)
+
+    def result(self, ticket: Ticket):
+        """Retrieve (and forget) a result, flushing first if needed.
+        Re-raises the execution error if this ticket's group failed."""
+        if ticket.tid not in self._results:
+            if any(s.ticket.tid == ticket.tid for s in self._queue) or \
+                    any(s.ticket.tid == ticket.tid
+                        for s in self._gather_queue):
+                self.flush()
+            if ticket.tid not in self._results:
+                raise KeyError(f"unknown ticket {ticket}")
+        out = self._results.pop(ticket.tid)
+        if isinstance(out, FailedResult):
+            raise out.error
+        return out
+
+    # -- fairness ------------------------------------------------------------
+
+    def _fair_order(self, queue: Sequence, cursor: int) -> List:
+        """Round-robin across tenants, FIFO within a tenant.
+
+        ``cursor`` picks the start tenant; ``flush`` advances it once per
+        flush (not per queue) so a tenant that happens to sort first gets
+        no standing head-of-line advantage.
+        """
+        by_tenant: "OrderedDict[str, deque]" = OrderedDict()
+        for sub in queue:
+            by_tenant.setdefault(sub.ticket.tenant, deque()).append(sub)
+        tenants = list(by_tenant)
+        if not tenants:
+            return []
+        start = cursor % len(tenants)
+        tenants = tenants[start:] + tenants[:start]
+        out = []
+        while by_tenant:
+            for t in list(tenants):
+                q = by_tenant.get(t)
+                if q is None:
+                    continue
+                out.append(q.popleft())
+                if not q:
+                    del by_tenant[t]
+                    tenants.remove(t)
+        return out
+
+    # -- execution -----------------------------------------------------------
+
+    def flush(self) -> FlushReport:
+        """Drain the queues: group, batch, execute, retire results.
+
+        A group whose execution raises does not poison the flush: its
+        members' tickets resolve to ``FailedResult`` (re-raised by
+        ``result``) and every other group still executes.
+        """
+        cursor = self._rr_cursor
+        self._rr_cursor += 1                 # once per flush, not per queue
+        order = self._fair_order(self._queue, cursor)
+        self._queue = []
+        groups: "OrderedDict[tuple, List[_Submission]]" = OrderedDict()
+        for sub in order:
+            # max_batch splits a key into successive waves
+            wave = 0
+            while (sub.group_key, wave) in groups and \
+                    len(groups[(sub.group_key, wave)]) >= self.max_batch:
+                wave += 1
+            groups.setdefault((sub.group_key, wave), []).append(sub)
+
+        reports = []
+        for members in groups.values():
+            try:
+                reports.append(self._execute_group(members))
+            except Exception as e:
+                self.stats["group_errors"] += 1
+                for sub in members:
+                    # keep results of members that did retire (fallback path)
+                    self._results.setdefault(sub.ticket.tid, FailedResult(e))
+                reports.append(GroupReport(
+                    len(members), members[0].program.name, vmapped=False,
+                    fell_back=False, error=repr(e)))
+
+        gq = self._fair_order(self._gather_queue, cursor)
+        self._gather_queue = []
+        try:
+            gather_stats = self._execute_gathers(gq)
+        except Exception as e:
+            self.stats["group_errors"] += 1
+            gather_stats = {}
+            for sub in gq:
+                self._results.setdefault(sub.ticket.tid, FailedResult(e))
+
+        self.stats["flushes"] += 1
+        self.stats["programs"] += len(order)
+        self.stats["gathers"] += len(gq)
+        return FlushReport(
+            order=tuple((s.ticket.tenant, s.ticket.tid)
+                        for s in list(order) + list(gq)),
+            groups=tuple(reports),
+            n_programs=len(order),
+            n_gathers=len(gq),
+            gather_coalescing=gather_stats)
+
+    def _execute_group(self, members: List[_Submission]) -> GroupReport:
+        prog = members[0].program
+        # streams are extracted eagerly (cheap NumPy, and it must not pin
+        # the members' envs in a long-lived report); the gain computation
+        # itself stays lazy — it runs only if the report is actually read
+        entries = _coalescing_entries(members)
+        thunk = (lambda e=entries: _coalescing_gains(e))
+        if len(members) == 1:
+            self.stats["singleton_groups"] += 1
+            exe = self.engine.executable(prog)
+            sub = members[0]
+            out_env, out_spd = exe(sub.env, sub.regs, {})
+            self._results[sub.ticket.tid] = (out_env, out_spd)
+            return GroupReport(1, prog.name, vmapped=False, fell_back=False,
+                               _coalescing_thunk=thunk)
+
+        # Regions backed by the same caller array in every member and never
+        # written by the program ride along unstacked (closed over by the
+        # vmapped lane): one resident copy of a shared table serves all
+        # lanes. Stacking/unstacking of everything else happens inside the
+        # jitted batch computation — one XLA dispatch for the whole group.
+        written = _written_regions(prog)
+        shared = frozenset(
+            k for k in members[0].env
+            if k not in written
+            and len({s.src_ids.get(k) for s in members}) == 1)
+        exe = self.engine.executable(prog, batch=len(members),
+                                     shared=shared)
+        try:
+            outs = exe.run_batch([s.env for s in members],
+                                 [s.regs for s in members])
+            for sub, out in zip(members, outs):
+                self._results[sub.ticket.tid] = out
+            self.stats["vmap_groups"] += 1
+            return GroupReport(len(members), prog.name, vmapped=True,
+                               fell_back=False, _coalescing_thunk=thunk)
+        except Exception:
+            # vmap could not trace this program shape: run each member
+            # through the (still cached) single-program executable.
+            self.stats["vmap_fallbacks"] += 1
+            for sub in members:
+                exe1 = self.engine.executable(sub.program)
+                self._results[sub.ticket.tid] = exe1(sub.env, sub.regs, {})
+            return GroupReport(len(members), prog.name, vmapped=False,
+                               fell_back=True, _coalescing_thunk=thunk)
+
+    def _execute_gathers(self, subs: List[_GatherSubmission]) -> Dict:
+        """Fuse pending gathers per table: ONE coalesced fetch serves all.
+
+        Rows requested by several tenants are fetched once (`coalesce` over
+        the concatenated streams) — the paper's cross-core row reuse.
+        """
+        by_table: "OrderedDict[int, List[_GatherSubmission]]" = OrderedDict()
+        for s in subs:
+            by_table.setdefault(s.table_id, []).append(s)
+        stats = {}
+        for tid_key, group in by_table.items():
+            table = group[0].table
+            streams = [s.idx for s in group]
+            unique_idx, inverses, n_unique = reorder.coalesce_streams(streams)
+            packed = table[unique_idx]       # single fused fetch
+            for s, inv in zip(group, inverses):
+                self._results[s.ticket.tid] = packed[inv]
+            gain, per, fused = reorder.cross_stream_gain(streams)
+            stats[tid_key] = (gain, per, fused)
+        return stats
+
+    # (cross-program coalescing measurement lives in the module-level
+    # helpers below so the lazy report thunk closes over extracted index
+    # streams only — never over submissions or their envs)
+
+
+def _coalescing_entries(members: List[_Submission]) -> Dict[str, list]:
+    """Per target region: [(caller-array id, static index stream), ...]
+    across the group's members. Small NumPy arrays only."""
+    per_region: Dict[str, list] = {}
+    for sub in members:
+        for region, stream in _static_index_streams(sub).items():
+            per_region.setdefault(region, []).append(
+                (sub.src_ids.get(region), stream))
+    return per_region
+
+
+def _coalescing_gains(per_region: Dict[str, list]) -> Dict:
+    """Score the coalescing the shared engine could apply across the
+    group's indirect streams, per target region (reported in the flush
+    report; execution stays on the bit-faithful engine path).
+
+    Only regions backed by the *same caller array* across members count —
+    two tenants indexing private tables that happen to share a region name
+    have no rows to reuse.
+    """
+    out = {}
+    for region, entries in per_region.items():
+        ids = {i for i, _ in entries}
+        if len(entries) < 2 or len(ids) != 1 or None in ids:
+            continue
+        out[region] = reorder.cross_stream_gain([s for _, s in entries])
+    return out
+
+
+def _written_regions(program: isa.AccessProgram) -> set:
+    """Regions the program stores to (IST/IRMW/SST bases) — never safe to
+    share across vmap lanes."""
+    return {ins.base for ins in program.instrs
+            if isinstance(ins, (isa.IST, isa.IRMW, isa.SST))}
+
+
+def _static_index_streams(sub: _Submission) -> Dict[str, np.ndarray]:
+    """Best-effort static evaluation of each ILD's index stream.
+
+    Walks the program propagating tiles computable from python-int regs and
+    env contents (SLD with int start/stride, ILD through a known tile, ALUS
+    with int operands). Unresolvable tiles (RNG outputs, traced regs,
+    condition-masked chains) simply drop out — this feeds *reporting* only.
+    """
+    known: Dict[str, np.ndarray] = {}
+    streams: Dict[str, list] = {}
+    ts = sub.program.tile_size
+
+    def _reg(r):
+        if isinstance(r, str):
+            v = sub.regs.get(r)
+            return v if isinstance(v, (int, float, np.integer)) else None
+        return r
+
+    for ins in sub.program.instrs:
+        if isinstance(ins, isa.SLD) and ins.tc is None:
+            start, stride = _reg(ins.rs1), _reg(ins.rs3)
+            if start is None or stride is None or ins.base not in sub.env:
+                continue
+            base = np.asarray(sub.env[ins.base])
+            addr = int(start) + np.arange(ts, dtype=np.int64) * int(stride)
+            known[ins.td] = base[np.clip(addr, 0, base.shape[0] - 1)]
+        elif isinstance(ins, isa.ILD):
+            idx = known.get(ins.ts1)
+            if idx is None or ins.base not in sub.env:
+                continue
+            count = ts
+            n = _reg("N")
+            if n is not None:
+                count = min(ts, int(n))
+            streams.setdefault(ins.base, []).append(
+                idx[:count].astype(np.int64))
+            base = np.asarray(sub.env[ins.base])
+            if base.ndim == 1:
+                # propagate ignoring the condition mask: lanes past the trip
+                # count are cut by [:count] above; this feeds reporting only.
+                known[ins.td] = base[
+                    np.clip(idx.astype(np.int64), 0, base.shape[0] - 1)]
+        elif isinstance(ins, isa.ALUS):
+            a, b = known.get(ins.ts), _reg(ins.rs)
+            if a is None or b is None:
+                continue
+            try:
+                known[ins.td] = np.asarray(isa.alu_apply(ins.op, a, b))
+            except Exception:
+                continue
+    return {r: np.concatenate(s) for r, s in streams.items() if s}

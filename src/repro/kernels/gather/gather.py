@@ -27,9 +27,11 @@ def _gather_kernel(tile_block_ref, offs_ref, table_ref, out_ref, *,
                    lanes: int):
     """One grid step: serve `lanes` words from the open block."""
     def body(l, _):
-        off = offs_ref[0, l]
+        # slice starts follow the enabled index width (int64 under x64)
+        off = offs_ref[0, l].astype(jnp.int_)
+        li = jnp.asarray(l, jnp.int_)
         row = pl.load(table_ref, (pl.dslice(off, 1), slice(None)))
-        pl.store(out_ref, (pl.dslice(l, 1), slice(None)), row)
+        pl.store(out_ref, (pl.dslice(li, 1), slice(None)), row)
         return _
     jax.lax.fori_loop(0, lanes, body, None)
 

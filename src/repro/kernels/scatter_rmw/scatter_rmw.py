@@ -35,9 +35,11 @@ def _rmw_kernel(tile_block_ref, tile_first_ref, offs_ref, table_ref,
         out_ref[...] = table_ref[...]
 
     def body(l, _):
-        off = offs_ref[0, l]
+        # slice starts follow the enabled index width (int64 under x64)
+        off = offs_ref[0, l].astype(jnp.int_)
+        li = jnp.asarray(l, jnp.int_)
         cur = pl.load(out_ref, (pl.dslice(off, 1), slice(None)))
-        upd = pl.load(vals_ref, (pl.dslice(l, 1), slice(None)))
+        upd = pl.load(vals_ref, (pl.dslice(li, 1), slice(None)))
         pl.store(out_ref, (pl.dslice(off, 1), slice(None)),
                  alu_apply(op, cur, upd))
         return _

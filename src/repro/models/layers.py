@@ -180,10 +180,13 @@ def attention(p: dict, x: jax.Array, *, n_heads: int, n_kv: int,
         # ring mode (sliding-window cache sized == window, e.g. danube
         # long_500k): the cache IS the window; writes wrap around.
         write_pos = cache_len % ck.shape[1] if ring else cache_len
+        # index dtypes must agree under either JAX_ENABLE_X64 setting
+        zero = jnp.zeros((), jnp.int_)
+        write_pos = jnp.asarray(write_pos, jnp.int_)
         ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
-                                          (0, write_pos, 0, 0))
+                                          (zero, write_pos, zero, zero))
         cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
-                                          (0, write_pos, 0, 0))
+                                          (zero, write_pos, zero, zero))
         new_cache = (ck, cv)
         k, v = ck, cv
 

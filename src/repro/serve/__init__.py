@@ -1,2 +1,3 @@
+from repro.serve.access_service import AccessService, CoreClient  # noqa: F401
 from repro.serve.kv_cache import PagedKVCache  # noqa: F401
 from repro.serve.serve import ServeLoop  # noqa: F401

@@ -1,0 +1,111 @@
+"""Async access-service frontend: N logical cores share one Scheduler.
+
+The paper's deployment model (Fig. 2): every core owns an MMIO submission
+queue into the single shared DX100; the accelerator batches and coalesces
+across whatever is outstanding. ``AccessService`` is that queue fabric for
+the serving layer:
+
+    svc = AccessService(tile_size=16384, auto_flush=16)
+    core = svc.connect("decode-worker-3")        # one handle per tenant
+    t = core.submit(program, env, regs)          # async: returns a Ticket
+    ...                                          # other cores submit too
+    env_out, spd = core.wait(t)                  # flushes shared queue
+
+``submit`` never executes anything — work is deferred until ``auto_flush``
+submissions are pending (one vmapped batch amortizes trace + dispatch), an
+explicit ``flush()``, or a ``wait`` that needs the result. ``submit_gather``
+routes bulk table gathers through the cross-request coalescing fast path:
+rows requested by several cores in the same flush window are fetched once.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional
+
+from repro.core.engine import Engine
+from repro.core.scheduler import FlushReport, Scheduler, Ticket
+
+
+class AccessService:
+    """Shared submit/poll frontend over one long-lived ``Scheduler``.
+
+    ``auto_flush``: pending-submission threshold that triggers a flush on
+    the next submit (0 disables auto-flushing; callers then flush/wait).
+    """
+
+    def __init__(self, scheduler: Optional[Scheduler] = None, *,
+                 tile_size: int = 16384, optimize: bool = True,
+                 max_batch: int = 32, auto_flush: int = 16):
+        self.scheduler = scheduler if scheduler is not None else Scheduler(
+            engine=Engine(tile_size=tile_size, optimize=optimize),
+            max_batch=max_batch)
+        self.auto_flush = int(auto_flush)
+        self.last_report: Optional[FlushReport] = None
+
+    # -- core handles --------------------------------------------------------
+
+    def connect(self, tenant: str) -> "CoreClient":
+        """A per-core handle; all handles share this service's queue."""
+        return CoreClient(self, tenant)
+
+    # -- submission / retrieval ---------------------------------------------
+
+    def submit(self, program, env: Mapping, regs: Mapping | None = None, *,
+               tenant: str = "core0") -> Ticket:
+        t = self.scheduler.submit(program, env, regs, tenant=tenant)
+        self._maybe_flush()
+        return t
+
+    def submit_gather(self, table, idx, *, tenant: str = "core0") -> Ticket:
+        t = self.scheduler.submit_gather(table, idx, tenant=tenant)
+        self._maybe_flush()
+        return t
+
+    def poll(self, ticket: Ticket):
+        """Non-blocking: result if retired, else None."""
+        return self.scheduler.poll(ticket)
+
+    def wait(self, ticket: Ticket):
+        """Retrieve a result, flushing the shared queue if still pending.
+        The flush goes through ``self.flush`` so ``last_report`` always
+        describes the flush that retired this ticket."""
+        if self.scheduler.poll(ticket) is None and self.scheduler.pending:
+            self.flush()
+        return self.scheduler.result(ticket)
+
+    def flush(self) -> FlushReport:
+        self.last_report = self.scheduler.flush()
+        return self.last_report
+
+    def _maybe_flush(self):
+        if self.auto_flush and self.scheduler.pending >= self.auto_flush:
+            self.flush()
+
+    @property
+    def pending(self) -> int:
+        return self.scheduler.pending
+
+    @property
+    def stats(self) -> dict:
+        """Merged scheduler + engine compile-cache counters."""
+        return {**self.scheduler.stats,
+                "engine": dict(self.scheduler.engine.stats)}
+
+
+@dataclasses.dataclass
+class CoreClient:
+    """One logical core's view of the shared service (fixed tenant id)."""
+    service: AccessService
+    tenant: str
+
+    def submit(self, program, env, regs=None) -> Ticket:
+        return self.service.submit(program, env, regs, tenant=self.tenant)
+
+    def submit_gather(self, table, idx) -> Ticket:
+        return self.service.submit_gather(table, idx, tenant=self.tenant)
+
+    def poll(self, ticket: Ticket):
+        return self.service.poll(ticket)
+
+    def wait(self, ticket: Ticket):
+        return self.service.wait(ticket)

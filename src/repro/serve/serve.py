@@ -29,6 +29,11 @@ class ServeLoop:
     model: Any
     batch_slots: int = 4
     max_cache_len: int = 256
+    # Optional shared bulk-access service (repro.serve.access_service).
+    # When set, pending access-program submissions from other tenants are
+    # drained once per admission wave — the serving host and the shared
+    # DX100 frontend share one tick loop, as in the paper's deployment.
+    access: Any = None
 
     def __post_init__(self):
         cfg = self.model.cfg
@@ -43,6 +48,8 @@ class ServeLoop:
         done: List[Request] = []
         queue = list(requests)
         while queue:
+            if self.access is not None and self.access.pending:
+                self.access.flush()     # drain shared bulk-access work
             wave = queue[:self.batch_slots]
             queue = queue[self.batch_slots:]
             b = len(wave)

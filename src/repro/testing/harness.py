@@ -27,6 +27,7 @@ import jax.numpy as jnp
 
 from repro.core import compiler
 from repro.core.engine import Engine
+from repro.core.scheduler import Scheduler
 from repro.testing import oracle
 from repro.testing.fuzzer import FuzzCase
 
@@ -165,6 +166,65 @@ def check_pattern_parity(p: compiler.Pattern, env: Mapping, *, n: int,
                             got, want, rtol=rtol, atol=atol)
                         checked += 1
     return checked
+
+
+def check_scheduler_parity(cases: Sequence, *, tile_size: int = 1024,
+                           optimize: bool = True, max_batch: int = 32,
+                           tenants: Sequence[str] = ("a", "b", "c"),
+                           scheduler: "Scheduler | None" = None,
+                           rtol: float = 1e-4, atol: float = 1e-5):
+    """Batched-execution parity: one Scheduler flush vs per-program oracle.
+
+    ``cases``: sequence of ``(pattern, env, n)`` with ``n <= tile_size``
+    (single-tile launches — the scheduler batches independent programs, so
+    cross-tile sequential dependencies stay with the per-tile driver).
+    Every submission is compiled, enqueued round-robin across ``tenants``,
+    executed in ONE flush (signature-compatible cases fuse into vmapped
+    groups), and compared region-by-region and tile-by-tile against an
+    independent per-program ``OracleEngine`` run — bit-exact for integers,
+    allclose for floats.
+
+    Returns ``(checked, report)``: comparison count + the FlushReport.
+    """
+    sched = scheduler if scheduler is not None else Scheduler(
+        engine=Engine(tile_size=tile_size, optimize=optimize),
+        max_batch=max_batch)
+    iota = np.arange(tile_size, dtype=np.int32)
+    entries = []
+    for k, (p, env, n) in enumerate(cases):
+        if n > tile_size:
+            raise ValueError(
+                f"case {k}: n={n} > tile_size={tile_size} "
+                "(scheduler parity uses single-tile launches)")
+        prog, info = compiler.compile_pattern(p, tile_size=tile_size)
+        jenv = {name: jnp.asarray(v) for name, v in env.items()}
+        jenv["__iota__"] = jnp.asarray(iota)
+        regs = {"tile_base": 0, "N": n, "tile_end": n}
+        ticket = sched.submit(prog, jenv, regs,
+                              tenant=tenants[k % len(tenants)])
+        entries.append((ticket, prog, env, regs))
+    report = sched.flush()
+
+    checked = 0
+    for ticket, prog, env, regs in entries:
+        got = sched.result(ticket)
+        genv, gspd = got
+        oeng = oracle.OracleEngine(tile_size=tile_size)
+        oenv_in = {name: np.asarray(v) for name, v in env.items()}
+        oenv_in["__iota__"] = np.asarray(iota)
+        oenv, ospd = oeng.run(prog, oenv_in, regs)
+        label = f"[sched tid={ticket.tid} {prog.name}]"
+        for name in oenv:
+            if name == "__iota__":
+                continue
+            _assert_match(f"{label} env[{name}] vs ISA oracle",
+                          genv[name], oenv[name], rtol=rtol, atol=atol)
+            checked += 1
+        for name in ospd:
+            _assert_match(f"{label} spd[{name}] vs ISA oracle",
+                          gspd[name], ospd[name], rtol=rtol, atol=atol)
+            checked += 1
+    return checked, report
 
 
 def check_case_parity(case: FuzzCase,

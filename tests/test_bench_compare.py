@@ -1,0 +1,89 @@
+"""Unit tests for the CI bench-regression gate (benchmarks/compare.py)."""
+import json
+
+import pytest
+
+from benchmarks import compare
+
+
+def _write(path, rows):
+    path.write_text(json.dumps({"bench": "x", "results": rows}))
+
+
+@pytest.fixture
+def pair(tmp_path):
+    base = tmp_path / "base"
+    fresh = tmp_path / "fresh"
+    base.mkdir()
+    fresh.mkdir()
+    return base, fresh
+
+
+def _levels(base_rows, fresh_rows, pair, **kw):
+    base, fresh = pair
+    _write(base / "BENCH_s.json", base_rows)
+    _write(fresh / "BENCH_s.json", fresh_rows)
+    out = list(compare.compare_files(
+        fresh / "BENCH_s.json", base / "BENCH_s.json",
+        threshold=kw.get("threshold", 0.25),
+        wall_slack=kw.get("wall_slack", 1.0),
+        name_filter=kw.get("name_filter", "throughput")))
+    return [lvl for lvl, _ in out]
+
+
+def test_ratio_within_threshold_passes(pair):
+    rows_b = [{"name": "a", "us_per_call": 10.0,
+               "derived": "gate_ratio=3.00"}]
+    rows_f = [{"name": "a", "us_per_call": 12.0,
+               "derived": "gate_ratio=2.50"}]
+    assert _levels(rows_b, rows_f, pair) == ["ok"]
+
+
+def test_ratio_regression_fails(pair):
+    rows_b = [{"name": "a", "us_per_call": 10.0,
+               "derived": "gate_ratio=3.00"}]
+    rows_f = [{"name": "a", "us_per_call": 12.0,
+               "derived": "gate_ratio=1.10"}]
+    assert _levels(rows_b, rows_f, pair) == ["fail"]
+
+
+def test_wall_time_cliff_fails(pair):
+    rows_b = [{"name": "x_throughput", "us_per_call": 100.0,
+               "derived": ""}]
+    rows_f = [{"name": "x_throughput", "us_per_call": 500.0,
+               "derived": ""}]
+    assert _levels(rows_b, rows_f, pair) == ["fail"]
+
+
+def test_wall_time_within_slack_passes(pair):
+    rows_b = [{"name": "x_throughput", "us_per_call": 100.0,
+               "derived": ""}]
+    rows_f = [{"name": "x_throughput", "us_per_call": 150.0,
+               "derived": ""}]
+    assert _levels(rows_b, rows_f, pair) == ["ok"]
+
+
+def test_unfiltered_wall_rows_ignored(pair):
+    rows_b = [{"name": "noisy_micro", "us_per_call": 100.0, "derived": ""}]
+    rows_f = [{"name": "noisy_micro", "us_per_call": 9999.0, "derived": ""}]
+    assert _levels(rows_b, rows_f, pair) == []
+
+
+def test_missing_row_warns_not_fails(pair):
+    rows_b = [{"name": "renamed_throughput", "us_per_call": 10.0,
+               "derived": ""}]
+    assert _levels(rows_b, [], pair) == ["warn"]
+
+
+def test_main_exit_codes(pair, tmp_path, capsys):
+    base, fresh = pair
+    _write(base / "BENCH_s.json",
+           [{"name": "a", "us_per_call": 1.0, "derived": "gate_ratio=2.0"}])
+    _write(fresh / "BENCH_s.json",
+           [{"name": "a", "us_per_call": 1.0, "derived": "gate_ratio=2.0"}])
+    assert compare.main(["--fresh", str(fresh),
+                         "--baseline", str(base)]) == 0
+    _write(fresh / "BENCH_s.json",
+           [{"name": "a", "us_per_call": 1.0, "derived": "gate_ratio=0.5"}])
+    assert compare.main(["--fresh", str(fresh),
+                         "--baseline", str(base)]) == 1

@@ -1,4 +1,6 @@
 """Unit tests: ISA semantics, engine execution, Table-1 workload patterns."""
+import dataclasses
+
 import numpy as np
 import jax.numpy as jnp
 import pytest
@@ -6,7 +8,7 @@ import pytest
 from repro.core import (Access, BinOp, Compare, Engine, LegalityError, Load,
                         Pattern, RangeLoop, Var, bulk_gather, bulk_rmw,
                         bulk_scatter, compile_pattern, fuse_ranges, isa,
-                        run_tiled)
+                        run_tiled, structural_signature)
 
 
 @pytest.fixture(scope="module")
@@ -209,3 +211,87 @@ class TestCompiledPatterns:
                 isa.IST("f32", "A", "t_idx", "t_val"),
                 isa.ILD("f32", "A", "t_out", "t_idx2"),
             ))
+
+
+# ---------------------------------------------------------------------------
+# compile cache: repeat submissions of identical structure must not re-trace
+# ---------------------------------------------------------------------------
+
+class TestCompileCache:
+    def _prog(self, name="g", tile=128):
+        pat = Pattern([Access("LD", "A", Load("B", Var("i")), dtype="f32")],
+                      name=name)
+        return compile_pattern(pat, tile_size=tile)
+
+    def _env(self, rng, tile=128):
+        return {"A": jnp.asarray(rng.normal(size=(256,)).astype(np.float32)),
+                "B": jnp.asarray(rng.integers(0, 256, size=(tile,))
+                                 .astype(np.int32)),
+                "__iota__": jnp.arange(tile, dtype=jnp.int32)}
+
+    def test_executable_is_cached(self, rng):
+        eng = Engine(tile_size=128)
+        prog, _ = self._prog()
+        exe1 = eng.executable(prog)
+        exe2 = eng.executable(prog)
+        assert exe1 is exe2
+        assert eng.stats == {"trace_requests": 2, "trace_misses": 1}
+        assert eng.cache_hits == 1
+
+    def test_name_is_not_part_of_identity(self):
+        eng = Engine(tile_size=128)
+        p1, _ = self._prog("one")
+        p2, _ = self._prog("two")
+        assert structural_signature(p1) == structural_signature(p2)
+        assert eng.executable(p1) is eng.executable(p2)
+
+    def test_repeat_calls_trace_once(self, rng):
+        """The satellite fix: N calls through jit_run == exactly 1 trace."""
+        eng = Engine(tile_size=128)
+        prog, info = self._prog()
+        regs = {"tile_base": 0, "N": 128, "tile_end": 128}
+        for k in range(6):
+            exe = eng.jit_run(prog)
+            env = self._env(np.random.default_rng(k))
+            _, spd = exe(env, regs, {})
+            np.testing.assert_allclose(
+                np.asarray(spd[info["loads"]["A"]]),
+                np.asarray(env["A"])[np.asarray(env["B"])])
+        exe = eng.jit_run(prog)
+        assert exe.traces == 1          # python side effect: 1 per retrace
+        assert exe.calls == 6
+        assert eng.stats["trace_misses"] == 1
+        assert eng.stats["trace_requests"] == 7  # 6 loop + 1 re-fetch
+
+    def test_engine_knobs_split_cache_entries(self):
+        e1 = Engine(tile_size=128, optimize=True)
+        prog, _ = self._prog()
+        a = e1.executable(prog)
+        e1.optimize = False
+        b = e1.executable(prog)
+        assert a is not b               # optimize flag changes lowering
+
+    def test_batched_executable_separate_entry(self):
+        eng = Engine(tile_size=128)
+        prog, _ = self._prog()
+        assert eng.executable(prog) is not eng.executable(prog, batch=4)
+        assert eng.executable(prog, batch=4) is eng.executable(prog, batch=4)
+
+    def test_structural_signature_covers_immediates(self):
+        pat1 = Pattern([Access("ST", "A",
+                               Load("B", BinOp("AND", Load("C", Var("i")),
+                                               0xFF)),
+                               value=Load("P", Var("i")), dtype="f32")])
+        pat2 = Pattern([Access("ST", "A",
+                               Load("B", BinOp("AND", Load("C", Var("i")),
+                                               0xF0)),
+                               value=Load("P", Var("i")), dtype="f32")])
+        p1, _ = compile_pattern(pat1, tile_size=64)
+        p2, _ = compile_pattern(pat2, tile_size=64)
+        assert structural_signature(p1) != structural_signature(p2)
+
+    def test_frozen_program_replace_shares_entry(self):
+        eng = Engine(tile_size=128)
+        prog, _ = self._prog()
+        renamed = dataclasses.replace(prog, name="renamed")
+        assert eng.executable(prog) is eng.executable(renamed)

@@ -1,0 +1,430 @@
+"""Scheduler tests: signature grouping, oracle parity for batched execution,
+tenant fairness, compile-cache behaviour, queue edge cases, stress."""
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (Access, BinOp, Compare, Engine, Load, Pattern,
+                        RangeLoop, Scheduler, Var, compile_pattern,
+                        cross_stream_gain, structural_signature)
+from repro.core import reorder
+from repro.serve import AccessService
+from repro.testing import harness
+from repro.testing.fuzzer import generate_case
+
+TILE = 256
+
+
+def _gather_pattern(name="g"):
+    return Pattern([Access("LD", "A", Load("B", Var("i")), dtype="f32")],
+                   name=name)
+
+
+def _gather_case(rng, rows=512, n=TILE, idx_bound=None):
+    A = rng.normal(size=(rows,)).astype(np.float32)
+    B = rng.integers(0, idx_bound or rows, size=(n,)).astype(np.int32)
+    return _gather_pattern(), {"A": A, "B": B}, n
+
+
+def _submit_tiled(sched, prog, env, n, tile, tenant="core0"):
+    env = dict(env)
+    env["__iota__"] = np.arange(tile, dtype=np.int32)
+    return sched.submit(prog, env, {"tile_base": 0, "N": n, "tile_end": n},
+                        tenant=tenant)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(7)
+
+
+# ---------------------------------------------------------------------------
+# structural signatures & grouping
+# ---------------------------------------------------------------------------
+
+class TestSignatureGrouping:
+    def test_name_excluded_from_signature(self):
+        p1, _ = compile_pattern(_gather_pattern("x"), tile_size=TILE)
+        p2, _ = compile_pattern(_gather_pattern("y"), tile_size=TILE)
+        assert structural_signature(p1) == structural_signature(p2)
+
+    def test_different_structure_differs(self):
+        p1, _ = compile_pattern(_gather_pattern(), tile_size=TILE)
+        pat2 = Pattern([Access("RMW", "A", Load("B", Var("i")),
+                               value=Load("V", Var("i")), op="ADD",
+                               dtype="f32")], name="r")
+        p2, _ = compile_pattern(pat2, tile_size=TILE)
+        assert structural_signature(p1) != structural_signature(p2)
+
+    def test_tile_size_in_signature(self):
+        p1, _ = compile_pattern(_gather_pattern(), tile_size=64)
+        p2, _ = compile_pattern(_gather_pattern(), tile_size=128)
+        assert structural_signature(p1) != structural_signature(p2)
+
+    def test_compatible_programs_group_into_one_vmap(self, rng):
+        sched = Scheduler(engine=Engine(tile_size=TILE))
+        prog, _ = compile_pattern(_gather_pattern(), tile_size=TILE)
+        for k in range(6):
+            _, env, n = _gather_case(rng)
+            _submit_tiled(sched, prog, env, n, TILE)
+        report = sched.flush()
+        assert len(report.groups) == 1
+        assert report.groups[0].n_programs == 6
+        assert report.groups[0].vmapped and not report.groups[0].fell_back
+
+    def test_incompatible_shapes_split_groups(self, rng):
+        sched = Scheduler(engine=Engine(tile_size=TILE))
+        prog, _ = compile_pattern(_gather_pattern(), tile_size=TILE)
+        _, env1, n = _gather_case(rng, rows=512)
+        _, env2, _ = _gather_case(rng, rows=1024)    # different A shape
+        _submit_tiled(sched, prog, env1, n, TILE)
+        _submit_tiled(sched, prog, env2, n, TILE)
+        report = sched.flush()
+        assert len(report.groups) == 2
+
+    def test_max_batch_splits_waves(self, rng):
+        sched = Scheduler(engine=Engine(tile_size=TILE), max_batch=4)
+        prog, _ = compile_pattern(_gather_pattern(), tile_size=TILE)
+        for _ in range(10):
+            _, env, n = _gather_case(rng)
+            _submit_tiled(sched, prog, env, n, TILE)
+        report = sched.flush()
+        assert sorted(g.n_programs for g in report.groups) == [2, 4, 4]
+
+
+# ---------------------------------------------------------------------------
+# oracle parity of batched execution
+# ---------------------------------------------------------------------------
+
+class TestBatchedParity:
+    def test_same_signature_gathers(self, rng):
+        cases = [_gather_case(rng) for _ in range(8)]
+        checked, report = harness.check_scheduler_parity(
+            cases, tile_size=TILE)
+        assert checked > 0
+        assert any(g.vmapped for g in report.groups)
+
+    def test_mixed_patterns(self, rng):
+        n = 128
+        cases = [_gather_case(rng, n=n)]
+        # conditional RMW
+        cases.append((
+            Pattern([Access("RMW", "T", Load("B", Var("i")),
+                            value=Load("V", Var("i")), op="ADD", dtype="f32",
+                            cond=Compare("GE", Load("D", Var("i")), 0.0))],
+                    name="rmw"),
+            {"T": np.zeros(64, np.float32),
+             "B": rng.integers(0, 64, size=(n,)).astype(np.int32),
+             "D": rng.normal(size=(n,)).astype(np.float32),
+             "V": rng.normal(size=(n,)).astype(np.float32)}, n))
+        # CSR range loop
+        rows = 32
+        H = np.zeros(rows + 1, np.int32)
+        H[1:] = np.cumsum(rng.multinomial(100, [1 / rows] * rows))
+        cases.append((
+            Pattern([Access("LD", "A", Load("B", Var("j")), dtype="f32")],
+                    range_loop=RangeLoop("j", Load("H", Var("i")),
+                                         Load("H", BinOp("ADD", Var("i"),
+                                                         1))),
+                    name="cg"),
+            {"A": rng.normal(size=(128,)).astype(np.float32),
+             "B": rng.integers(0, 128, size=(100,)).astype(np.int32),
+             "H": H}, rows))
+        checked, report = harness.check_scheduler_parity(
+            cases, tile_size=TILE)
+        assert checked > 0
+        assert report.n_programs == 3
+
+    def test_fuzz_cases_through_scheduler(self):
+        cases = []
+        for seed in range(12):
+            c = generate_case(seed)
+            cases.append((c.pattern, c.env, min(c.n, TILE)))
+        checked, _ = harness.check_scheduler_parity(cases, tile_size=TILE)
+        assert checked > 0
+
+    @pytest.mark.slow
+    def test_stress_64_concurrent_programs(self, rng):
+        """64 programs, 7 tenants, mixed signatures, one flush."""
+        cases = []
+        for k in range(64):
+            if k % 3 == 0:
+                n = 128
+                cases.append((
+                    Pattern([Access("RMW", "T", Load("B", Var("i")),
+                                    value=Load("V", Var("i")), op="ADD",
+                                    dtype="f32")], name=f"r{k}"),
+                    {"T": np.zeros(64, np.float32),
+                     "B": rng.integers(0, 64, size=(n,)).astype(np.int32),
+                     "V": rng.normal(size=(n,)).astype(np.float32)}, n))
+            else:
+                cases.append(_gather_case(rng))
+        checked, report = harness.check_scheduler_parity(
+            cases, tile_size=TILE, max_batch=64,
+            tenants=tuple(f"t{i}" for i in range(7)))
+        assert report.n_programs == 64
+        assert checked > 0
+
+
+# ---------------------------------------------------------------------------
+# fairness
+# ---------------------------------------------------------------------------
+
+class TestFairness:
+    def test_round_robin_under_mixed_load(self, rng):
+        """A bulk submitter (10 programs) must not starve light tenants."""
+        sched = Scheduler(engine=Engine(tile_size=TILE))
+        prog, _ = compile_pattern(_gather_pattern(), tile_size=TILE)
+        for _ in range(10):
+            _, env, n = _gather_case(rng)
+            _submit_tiled(sched, prog, env, n, TILE, tenant="bulk")
+        for t in ("light1", "light2"):
+            _, env, n = _gather_case(rng)
+            _submit_tiled(sched, prog, env, n, TILE, tenant=t)
+        report = sched.flush()
+        tenants = [t for t, _ in report.order]
+        # every light tenant is served within the first round (3 tenants)
+        assert set(tenants[:3]) == {"bulk", "light1", "light2"}
+        # bulk's backlog fills the tail
+        assert tenants[-7:] == ["bulk"] * 7
+
+    def test_start_tenant_rotates_between_flushes(self, rng):
+        sched = Scheduler(engine=Engine(tile_size=TILE))
+        prog, _ = compile_pattern(_gather_pattern(), tile_size=TILE)
+        firsts = []
+        for _ in range(3):
+            for t in ("a", "b", "c"):
+                _, env, n = _gather_case(rng)
+                _submit_tiled(sched, prog, env, n, TILE, tenant=t)
+            firsts.append(sched.flush().order[0][0])
+        assert firsts == ["a", "b", "c"]
+
+    def test_rotation_survives_mixed_gather_traffic(self, rng):
+        """The rotation cursor advances once per FLUSH — concurrent gather
+        traffic must not double-step it (which would park the start tenant
+        on one value forever with two tenants)."""
+        sched = Scheduler(engine=Engine(tile_size=TILE))
+        prog, _ = compile_pattern(_gather_pattern(), tile_size=TILE)
+        table = rng.normal(size=(32,)).astype(np.float32)
+        firsts = []
+        for _ in range(2):
+            for t in ("a", "b"):
+                _, env, n = _gather_case(rng)
+                _submit_tiled(sched, prog, env, n, TILE, tenant=t)
+            sched.submit_gather(table, np.arange(4, dtype=np.int32))
+            firsts.append(sched.flush().order[0][0])
+        assert firsts == ["a", "b"]
+
+    def test_fifo_within_tenant(self, rng):
+        sched = Scheduler(engine=Engine(tile_size=TILE))
+        prog, _ = compile_pattern(_gather_pattern(), tile_size=TILE)
+        tids = []
+        for _ in range(4):
+            _, env, n = _gather_case(rng)
+            tids.append(_submit_tiled(sched, prog, env, n, TILE,
+                                      tenant="only").tid)
+        order = sched.flush().order
+        assert [tid for _, tid in order] == tids
+
+
+# ---------------------------------------------------------------------------
+# compile cache
+# ---------------------------------------------------------------------------
+
+class TestCompileCache:
+    def test_repeat_flushes_hit_cache(self, rng):
+        """Satellite fix: repeat submissions must not re-trace."""
+        sched = Scheduler(engine=Engine(tile_size=TILE))
+        prog, _ = compile_pattern(_gather_pattern(), tile_size=TILE)
+        for _ in range(5):
+            for _ in range(4):
+                _, env, n = _gather_case(rng)
+                _submit_tiled(sched, prog, env, n, TILE)
+            sched.flush()
+        stats = sched.engine.stats
+        assert stats["trace_requests"] == 5
+        assert stats["trace_misses"] == 1          # one batch-4 trace, ever
+        assert sched.engine.cache_hits == 4
+        exe = sched.engine.executable(prog, batch=4)
+        assert exe.traces == 1 and exe.calls == 5
+
+    def test_name_change_still_hits(self, rng):
+        sched = Scheduler(engine=Engine(tile_size=TILE))
+        for k in range(3):
+            prog, _ = compile_pattern(_gather_pattern(f"n{k}"),
+                                      tile_size=TILE)
+            _, env, n = _gather_case(rng)
+            _submit_tiled(sched, prog, env, n, TILE)
+            sched.flush()
+        assert sched.engine.stats["trace_misses"] == 1
+
+
+# ---------------------------------------------------------------------------
+# queue edge cases + gather fast path
+# ---------------------------------------------------------------------------
+
+class TestEdgeCases:
+    def test_empty_flush(self):
+        sched = Scheduler(engine=Engine(tile_size=TILE))
+        report = sched.flush()
+        assert report.n_programs == 0 and report.groups == ()
+        assert report.order == ()
+
+    def test_double_flush_idempotent(self, rng):
+        sched = Scheduler(engine=Engine(tile_size=TILE))
+        prog, info = compile_pattern(_gather_pattern(), tile_size=TILE)
+        _, env, n = _gather_case(rng)
+        t = _submit_tiled(sched, prog, env, n, TILE)
+        sched.flush()
+        assert sched.flush().n_programs == 0
+        _, spd = sched.result(t)
+        np.testing.assert_allclose(
+            np.asarray(spd[info["loads"]["A"]]),
+            env["A"][env["B"]])
+
+    def test_unknown_ticket_raises(self):
+        sched = Scheduler(engine=Engine(tile_size=TILE))
+        with pytest.raises(KeyError):
+            sched.result(dataclasses.replace(
+                sched._ticket("x"), tid=999))
+
+    def test_result_autoflushes(self, rng):
+        sched = Scheduler(engine=Engine(tile_size=TILE))
+        prog, _ = compile_pattern(_gather_pattern(), tile_size=TILE)
+        _, env, n = _gather_case(rng)
+        t = _submit_tiled(sched, prog, env, n, TILE)
+        assert sched.poll(t) is None            # still queued
+        env_out, _ = sched.result(t)            # implicit flush
+        assert "A" in env_out
+
+    def test_gather_fast_path_fuses_shared_table(self, rng):
+        sched = Scheduler(engine=Engine(tile_size=TILE))
+        table = rng.normal(size=(256, 4)).astype(np.float32)
+        i1 = rng.integers(0, 64, size=(200,)).astype(np.int32)
+        i2 = rng.integers(0, 64, size=(200,)).astype(np.int32)
+        t1 = sched.submit_gather(table, i1, tenant="a")
+        t2 = sched.submit_gather(table, i2, tenant="b")
+        report = sched.flush()
+        assert len(report.gather_coalescing) == 1
+        gain, per, fused = next(iter(report.gather_coalescing.values()))
+        assert fused <= per and gain >= 1.0
+        np.testing.assert_allclose(np.asarray(sched.result(t1)), table[i1])
+        np.testing.assert_allclose(np.asarray(sched.result(t2)), table[i2])
+
+    def test_empty_gather_stream(self, rng):
+        sched = Scheduler(engine=Engine(tile_size=TILE))
+        table = rng.normal(size=(16,)).astype(np.float32)
+        t = sched.submit_gather(table, np.zeros((0,), np.int32))
+        sched.flush()
+        assert sched.result(t).shape == (0,)
+
+    def test_gather_tables_freed_between_submits_do_not_fuse(self):
+        """CPython reuses a freed object's id(); the queue must pin the
+        caller's table so two *different* tables can never alias one
+        fusion group."""
+        sched = Scheduler(engine=Engine(tile_size=TILE))
+        idx = np.arange(4, dtype=np.int32)
+        t1 = sched.submit_gather(np.full(8, 1.0, np.float32), idx)
+        # the first table has no caller-side ref anymore; a same-shape
+        # allocation would land on the same address without the pin
+        t2 = sched.submit_gather(np.full(8, 2.0, np.float32), idx)
+        report = sched.flush()
+        assert len(report.gather_coalescing) == 2   # distinct tables
+        np.testing.assert_allclose(np.asarray(sched.result(t1)),
+                                   np.ones(4, np.float32))
+        np.testing.assert_allclose(np.asarray(sched.result(t2)),
+                                   np.full(4, 2.0, np.float32))
+
+    def test_bad_submission_does_not_poison_other_tenants(self, rng):
+        """A group that raises resolves to FailedResult; every other
+        group still executes and retires normally."""
+        from repro.core.scheduler import FailedResult
+        sched = Scheduler(engine=Engine(tile_size=TILE))
+        prog, info = compile_pattern(_gather_pattern(), tile_size=TILE)
+        _, env, n = _gather_case(rng)
+        good = _submit_tiled(sched, prog, env, n, TILE, tenant="nice")
+        bad_env = {"B": env["B"],                   # region "A" missing
+                   "__iota__": np.arange(TILE, dtype=np.int32)}
+        bad = sched.submit(prog, bad_env,
+                           {"tile_base": 0, "N": n, "tile_end": n},
+                           tenant="evil")
+        report = sched.flush()
+        assert sched.stats["group_errors"] == 1
+        assert any(g.error for g in report.groups)
+        assert isinstance(sched.poll(bad), FailedResult)
+        with pytest.raises(KeyError):
+            sched.result(bad)                       # re-raises the cause
+        _, spd = sched.result(good)                 # unharmed
+        np.testing.assert_allclose(
+            np.asarray(spd[info["loads"]["A"]]), env["A"][env["B"]])
+
+
+# ---------------------------------------------------------------------------
+# cross-stream coalescing primitives
+# ---------------------------------------------------------------------------
+
+class TestCrossStreamCoalesce:
+    def test_coalesce_streams_roundtrip(self, rng):
+        streams = [rng.integers(0, 32, size=(s,)).astype(np.int32)
+                   for s in (10, 20, 5)]
+        uniq, invs, n_unique = reorder.coalesce_streams(
+            [jnp.asarray(s) for s in streams])
+        for s, inv in zip(streams, invs):
+            np.testing.assert_array_equal(np.asarray(uniq)[np.asarray(inv)],
+                                          s)
+        assert int(n_unique) == len(np.unique(np.concatenate(streams)))
+
+    def test_gain_overlapping_streams(self):
+        a = np.asarray([0, 1, 2, 3], np.int32)
+        gain, per, fused = cross_stream_gain([a, a, a])
+        assert per == 12 and fused == 4 and gain == 3.0
+
+    def test_gain_disjoint_streams_is_one(self):
+        gain, _, _ = cross_stream_gain(
+            [np.asarray([0, 1], np.int32), np.asarray([2, 3], np.int32)])
+        assert gain == 1.0
+
+    def test_empty_inputs(self):
+        gain, per, fused = cross_stream_gain([])
+        assert gain == 1.0 and per == 0 and fused == 0
+        uniq, invs, n = reorder.coalesce_streams([])
+        assert uniq.shape == (0,) and invs == () and int(n) == 0
+
+
+# ---------------------------------------------------------------------------
+# access service frontend
+# ---------------------------------------------------------------------------
+
+class TestAccessService:
+    def test_auto_flush_threshold(self, rng):
+        svc = AccessService(tile_size=TILE, auto_flush=4)
+        prog, _ = compile_pattern(_gather_pattern(), tile_size=TILE)
+        cores = [svc.connect(f"c{i}") for i in range(4)]
+        tickets = []
+        for core in cores:
+            _, env, n = _gather_case(rng)
+            env["__iota__"] = np.arange(TILE, dtype=np.int32)
+            tickets.append(core.submit(
+                prog, env, {"tile_base": 0, "N": n, "tile_end": n}))
+        # 4th submission crossed the threshold -> already retired
+        assert svc.pending == 0
+        assert all(svc.poll(t) is not None for t in tickets)
+        assert svc.last_report.n_programs == 4
+
+    def test_wait_flushes_on_demand(self, rng):
+        svc = AccessService(tile_size=TILE, auto_flush=0)
+        core = svc.connect("c0")
+        prog, info = compile_pattern(_gather_pattern(), tile_size=TILE)
+        _, env, n = _gather_case(rng)
+        env["__iota__"] = np.arange(TILE, dtype=np.int32)
+        t = core.submit(prog, env, {"tile_base": 0, "N": n, "tile_end": n})
+        assert core.poll(t) is None
+        _, spd = core.wait(t)
+        np.testing.assert_allclose(
+            np.asarray(spd[info["loads"]["A"]]), env["A"][env["B"]])
+        assert svc.stats["engine"]["trace_misses"] == 1
+        # the wait-triggered flush must be visible in last_report
+        assert svc.last_report is not None
+        assert svc.last_report.n_programs == 1
