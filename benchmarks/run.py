@@ -21,11 +21,11 @@ from pathlib import Path
 
 def main() -> None:
     from benchmarks import (common, locality, microbench, scheduler_bench,
-                            tilesize, workloads)
+                            sharded_bench, tilesize, workloads)
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("only", nargs="?", default=None,
                     choices=("microbench", "locality", "workloads",
-                             "tilesize", "scheduler"),
+                             "tilesize", "scheduler", "sharded"),
                     help="run a single module (default: all)")
     ap.add_argument("--json", action="store_true",
                     help="write BENCH_<module>.json in the cwd")
@@ -34,7 +34,8 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name, mod in (("microbench", microbench), ("locality", locality),
                       ("workloads", workloads), ("tilesize", tilesize),
-                      ("scheduler", scheduler_bench)):
+                      ("scheduler", scheduler_bench),
+                      ("sharded", sharded_bench)):
         if args.only and args.only != name:
             continue
         print(f"# --- {name} ---", flush=True)

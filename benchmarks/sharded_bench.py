@@ -1,0 +1,79 @@
+"""Sharded bulk-access benchmark: §6.6 multi-unit scaling on a device mesh.
+
+Run on a CPU host with a forced multi-device mesh:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python -m benchmarks.run sharded --json
+
+Rows (JSON via ``benchmarks.run sharded --json``):
+  sharded_gather_<m>x   us per fused gather through ``ShardedEngine`` at
+                        mesh size m (owner-partition -> all_to_all ->
+                        owner-local reorder+coalesce -> inverse exchange)
+  sharded_rmw_<m>x      us per sharded scatter-RMW (integer ADD; cross-
+                        shard duplicates segment-combined owner-locally)
+  sharded_coalesce_<M>x owner-local dedup at the largest mesh; carries
+                        ``gate_ratio=<gain>`` — pure index-distribution
+                        arithmetic, machine-independent, so the CI bench
+                        gate (benchmarks/compare.py) holds it exactly
+  sharded_local_fraction_<M>x  exchange locality of the blocked index mix
+
+Wall times across mesh sizes are *proxies* (forced host devices share one
+CPU's memory bandwidth); the committed snapshot pins the deterministic
+coalescing row, which is what regresses if the exchange or the owner-local
+pipeline breaks. Mesh sizes above the visible device count are skipped.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, make_indices, time_fn
+from repro.distributed import ShardedEngine
+
+ROWS = 1 << 15
+N_IDX = 1 << 14
+D = 16
+
+
+def run():
+    rng = np.random.default_rng(0)
+    n_dev = len(jax.devices())
+    sizes = [m for m in (1, 2, 4, 8) if m <= n_dev]
+    if sizes[-1] < 8:
+        print(f"# only {n_dev} device(s) visible; set XLA_FLAGS="
+              "--xla_force_host_platform_device_count=8 for the full "
+              "sweep", flush=True)
+    table = jnp.asarray(rng.normal(size=(ROWS, D)).astype(np.float32))
+    itable = jnp.asarray(
+        rng.integers(0, 2 ** 15, size=ROWS).astype(np.int32))
+    idx = jnp.asarray(make_indices(rng, ROWS, N_IDX, "zipf"))
+    vals = jnp.asarray(rng.integers(0, 64, size=N_IDX).astype(np.int32))
+
+    for m in sizes:
+        eng = ShardedEngine(mesh=m)
+        t = time_fn(lambda: eng.sharded_gather(table, idx),
+                    iters=5, warmup=2, agg=min)
+        emit(f"sharded_gather_{m}x", t,
+             f"{N_IDX} zipf idx over ({ROWS},{D}) f32")
+        t = time_fn(lambda: eng.sharded_rmw(itable, idx, vals, op="ADD"),
+                    iters=5, warmup=2, agg=min)
+        emit(f"sharded_rmw_{m}x", t,
+             f"{N_IDX} int32 ADD over {ROWS} rows")
+
+    # deterministic coalescing / locality rows at the largest mesh: these
+    # depend only on the seeded index distribution and the address-range
+    # partition, never on the machine
+    m = sizes[-1]
+    eng = ShardedEngine(mesh=m)
+    eng.sharded_gather(table, idx)
+    st = eng.last_shard_stats
+    gain = float(st.received.sum() / max(st.unique.sum(), 1))
+    emit(f"sharded_coalesce_{m}x", 0.0,
+         f"owner-local dedup gate_ratio={gain:.2f} "
+         f"recv={int(st.received.sum())} uniq={int(st.unique.sum())}")
+    bidx = jnp.asarray(make_indices(rng, ROWS, N_IDX, "blocked"))
+    eng.sharded_gather(table, bidx)
+    st = eng.last_shard_stats
+    emit(f"sharded_local_fraction_{m}x", 0.0,
+         f"blocked mix local_fraction={st.local_fraction:.2f}")

@@ -94,6 +94,7 @@ class TracedExecutable:
             self.traces += 1
             stacked = {k: jnp.stack([e[k] for e in menvs])
                        for k in menvs[0]}
+            stacked = engine._constrain_batch(stacked)
             regs = {k: jnp.asarray([r[k] for r in regs_list])
                     for k in regs_list[0]}
 
@@ -175,6 +176,14 @@ class Engine:
                                    shared=shared)
             self._cache[key] = exe
         return exe
+
+    # -- batch placement hook ------------------------------------------------
+    def _constrain_batch(self, stacked: Dict) -> Dict:
+        """Hook applied to the stacked lane arrays of a batched executable.
+        The base engine leaves placement to XLA; mesh-backed engines
+        (``distributed.ShardedEngine``) override this to spread the lane
+        axis across their devices."""
+        return stacked
 
     # -- scalar operand resolution (register file) -------------------------
     @staticmethod

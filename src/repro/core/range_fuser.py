@@ -34,6 +34,13 @@ def fuse_ranges(lo: jax.Array, hi: jax.Array, *, capacity: int,
       For p < total:  outer[p] = i of the p-th fused iteration,
                       inner[p] = j value.
     """
+    if lo.shape[0] == 0:
+        # zero outer iterations (an empty BFS frontier is a legal Table-1
+        # input): all-invalid output with total == 0, matching
+        # reorder.coalesce's empty-stream handling. The general path below
+        # would die on lo[outer] (zero-size slice).
+        z = jnp.zeros((capacity,), jnp.int32)
+        return z, z, jnp.zeros((), jnp.int32)
     lo = lo.astype(jnp.int32)
     hi = hi.astype(jnp.int32)
     lens = jnp.maximum(hi - lo, 0)

@@ -41,6 +41,14 @@ def coalesce(idx: jax.Array, *, size: int | None = None):
     Returns ``(unique_idx, inverse, n_unique)`` where
     ``unique_idx[inverse] == idx`` and ``unique_idx`` is sorted ascending and
     padded (with its max value) to a static ``size`` (default: len(idx)).
+
+    ``size`` must hold every distinct value: ``jnp.unique(..., size=k)`` on
+    a stream with more than ``k`` distinct values truncates the unique array
+    while ``inverse`` keeps positions into the *untruncated* one, and JAX's
+    clamping gather would then silently misread the last row for every
+    overflow entry. With concrete inputs an overflow raises ``ValueError``;
+    under a trace (where raising on data is impossible) ``inverse`` is
+    clamped into range so no entry can index past the unique array.
     """
     size = int(size if size is not None else idx.shape[0])
     if idx.shape[0] == 0:
@@ -51,6 +59,17 @@ def coalesce(idx: jax.Array, *, size: int | None = None):
     # fill is the min, which would break the row-table plan's sort invariant)
     unique_idx, inverse = jnp.unique(
         idx, return_inverse=True, size=size, fill_value=jnp.max(idx))
+    if size < idx.shape[0]:
+        # overflow is only possible when the static budget is below the
+        # stream length, so the common size>=len path pays nothing here
+        s = jnp.sort(idx)
+        true_n = 1 + jnp.sum((s[1:] != s[:-1]).astype(jnp.int32))
+        if not isinstance(true_n, jax.core.Tracer) and int(true_n) > size:
+            raise ValueError(
+                f"coalesce: {int(true_n)} distinct values do not fit the "
+                f"static size={size}; raise size (or pass size=None for "
+                f"the safe default of len(idx))")
+        inverse = jnp.minimum(inverse, size - 1)
     n_unique = jnp.sum(
         jnp.concatenate([jnp.ones((1,), jnp.int32),
                          (unique_idx[1:] != unique_idx[:-1]).astype(jnp.int32)])

@@ -25,6 +25,13 @@ outstanding requests. This module is that shared frontend:
 
 Everything degrades safely: a group whose program vmap cannot trace falls
 back to per-program cached executables, and a group of one skips stacking.
+
+When the backing engine spans a device mesh (``distributed.ShardedEngine``,
+duck-typed on ``sharded_gather`` so this module never imports the
+distributed package), fused gather fetches execute owner-locally per shard
+(§6.6 address-range partitioning) and batched program groups fan out
+lane-wise across the mesh; ``FlushReport.shard_stats`` carries the
+per-shard exchange/coalescing record.
 """
 from __future__ import annotations
 
@@ -116,6 +123,9 @@ class FlushReport:
     n_gathers: int
     # table id -> (gain, per-request unique total, fused unique)
     gather_coalescing: Dict[int, Tuple[float, int, int]]
+    # table id -> per-shard exchange/coalescing record (ShardStats), filled
+    # only when the backing engine spans a device mesh
+    shard_stats: Dict[int, object] = dataclasses.field(default_factory=dict)
 
 
 # ---------------------------------------------------------------------------
@@ -291,10 +301,10 @@ class Scheduler:
         gq = self._fair_order(self._gather_queue, cursor)
         self._gather_queue = []
         try:
-            gather_stats = self._execute_gathers(gq)
+            gather_stats, shard_stats = self._execute_gathers(gq)
         except Exception as e:
             self.stats["group_errors"] += 1
-            gather_stats = {}
+            gather_stats, shard_stats = {}, {}
             for sub in gq:
                 self._results.setdefault(sub.ticket.tid, FailedResult(e))
 
@@ -307,7 +317,8 @@ class Scheduler:
             groups=tuple(reports),
             n_programs=len(order),
             n_gathers=len(gq),
-            gather_coalescing=gather_stats)
+            gather_coalescing=gather_stats,
+            shard_stats=shard_stats)
 
     def _execute_group(self, members: List[_Submission]) -> GroupReport:
         prog = members[0].program
@@ -355,26 +366,48 @@ class Scheduler:
             return GroupReport(len(members), prog.name, vmapped=False,
                                fell_back=True, _coalescing_thunk=thunk)
 
-    def _execute_gathers(self, subs: List[_GatherSubmission]) -> Dict:
+    def _execute_gathers(self, subs: List[_GatherSubmission]) -> tuple:
         """Fuse pending gathers per table: ONE coalesced fetch serves all.
 
         Rows requested by several tenants are fetched once (`coalesce` over
-        the concatenated streams) — the paper's cross-core row reuse.
+        the concatenated streams) — the paper's cross-core row reuse. When
+        the backing engine spans a device mesh (duck-typed on
+        ``sharded_gather`` so core never imports ``repro.distributed``),
+        the fused fetch itself is executed owner-locally per shard and the
+        exchange/coalescing record lands in ``FlushReport.shard_stats``.
         """
         by_table: "OrderedDict[int, List[_GatherSubmission]]" = OrderedDict()
         for s in subs:
             by_table.setdefault(s.table_id, []).append(s)
         stats = {}
+        shard_stats = {}
+        sharded = getattr(self.engine, "sharded_gather", None)
+        num_shards = int(getattr(self.engine, "num_shards", 1))
         for tid_key, group in by_table.items():
             table = group[0].table
             streams = [s.idx for s in group]
             unique_idx, inverses, n_unique = reorder.coalesce_streams(streams)
-            packed = table[unique_idx]       # single fused fetch
+            if sharded is not None and table.shape[0] >= num_shards:
+                # the fused fetch spans the mesh: every row is served by
+                # its owner shard (address-range split, §6.6). Coalesce
+                # padding (replicas of the max index) is masked out rather
+                # than sliced off: pad lanes would skew the exchange toward
+                # the max row's owner and pollute the per-shard stats, but
+                # a data-dependent slice length would force a fresh
+                # shard_map trace per distinct n_unique and a host sync
+                # here — the mask keeps shapes static and dispatch async.
+                pad_valid = (jnp.arange(unique_idx.shape[0],
+                                        dtype=jnp.int32) < n_unique)
+                packed = sharded(table, unique_idx, valid=pad_valid)
+                if self.engine.last_shard_stats is not None:
+                    shard_stats[tid_key] = self.engine.last_shard_stats
+            else:
+                packed = table[unique_idx]   # single fused fetch
             for s, inv in zip(group, inverses):
                 self._results[s.ticket.tid] = packed[inv]
             gain, per, fused = reorder.cross_stream_gain(streams)
             stats[tid_key] = (gain, per, fused)
-        return stats
+        return stats, shard_stats
 
     # (cross-program coalescing measurement lives in the module-level
     # helpers below so the lazy report thunk closes over extracted index

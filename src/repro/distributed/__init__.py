@@ -1,0 +1,28 @@
+"""repro.distributed — sharded bulk-access engine (paper §6.6 at mesh scale).
+
+DX100 scales by interleaving bulk requests across all memory channels and,
+with multiple accelerators, by partitioning the address range across units.
+This package is that move on a JAX device mesh:
+
+  mesh          1-D 'shards' device mesh helpers (CPU hosts force extra
+                devices via XLA_FLAGS=--xla_force_host_platform_device_count)
+  exchange      owner partitioning + the ragged-to-static all_to_all
+                discipline (static per-shard capacity + validity counts)
+  engine        ShardedEngine — drop-in Engine whose bulk gather /
+                scatter-RMW streams span the mesh via shard_map, and whose
+                batched program groups fan out lane-wise across devices
+
+Quick check (any mesh size that fits the visible devices):
+
+    from repro.testing import harness
+    harness.check_sharded_parity()          # gather+RMW vs NumPy oracle
+"""
+from repro.distributed.engine import ShardStats, ShardedEngine
+from repro.distributed.exchange import (masked_unique_count,
+                                        partition_by_owner)
+from repro.distributed.mesh import as_mesh, device_mesh
+
+__all__ = [
+    "ShardedEngine", "ShardStats", "device_mesh", "as_mesh",
+    "partition_by_owner", "masked_unique_count",
+]

@@ -1,0 +1,273 @@
+"""ShardedEngine: the bulk-access engine spanning a JAX device mesh.
+
+Paper §6.6, option 1: multiple DX100 units partition the address range, and
+each bulk request stream is split by owner unit so that the reorder /
+coalesce / interleave pipeline runs *next to the memory that holds the
+rows*. Here a 1-D device mesh plays the unit array and ``shard_map`` the
+fabric:
+
+  1. each shard owns an equal row range of the table
+     (``reorder.shard_bulk_indices`` layout) and an equal slice of the
+     request stream;
+  2. the stream is partitioned by owner into static-capacity buckets
+     (``exchange.partition_by_owner`` — the ragged-to-static discipline of
+     ``RowTablePlan``: static shapes + validity counts);
+  3. one ``all_to_all`` lands every index on its owner shard;
+  4. the owner runs the existing single-device pipeline locally —
+     ``bulk_gather``'s sort+dedup for gathers, ``bulk_rmw``'s
+     sort→segment-combine→unique-scatter for RMWs, so cross-shard
+     duplicates merge *before* touching the table (reorder-safe ops only,
+     the §3.1 RMW restriction);
+  5. gather values return via the inverse ``all_to_all`` and are unpacked
+     to request order.
+
+``ShardedEngine`` extends ``Engine``: programs, the compile cache and the
+``Scheduler`` frontend all keep working, batched program groups additionally
+fan out lane-wise across the mesh (``_constrain_batch``), and the
+``Scheduler`` gather fast path routes fused fetches through
+``sharded_gather`` (duck-typed — core never imports this package).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core import bulk_ops, isa, reorder
+from repro.core.engine import Engine
+from repro.distributed import exchange
+from repro.distributed.mesh import as_mesh
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardStats:
+    """Per-stream record of one sharded bulk access.
+
+    ``sent[i, j]`` counts valid lanes shard ``i`` routed to owner ``j``;
+    ``received[j]`` / ``unique[j]`` are each owner's incoming lane count
+    and distinct-row count — the per-shard coalescing statistic the
+    ``FlushReport`` rolls up. Fields hold device arrays so recording one
+    never blocks the flush hot path (same discipline as the lazy
+    ``GroupReport`` coalescing thunk); reading a field or property
+    materializes it.
+    """
+    sent: jax.Array
+    received: jax.Array
+    unique: jax.Array
+
+    @property
+    def num_shards(self) -> int:
+        return int(self.received.shape[0])
+
+    @property
+    def coalescing_gain(self) -> np.ndarray:
+        """Owner-local dedup factor per shard (#landed / #distinct)."""
+        r, u = np.asarray(self.received), np.asarray(self.unique)
+        return r / np.maximum(u, 1)
+
+    @property
+    def local_fraction(self) -> float:
+        """Fraction of requests already resident on their source shard
+        (the diagonal of the exchange matrix — no fabric traffic)."""
+        s = np.asarray(self.sent)
+        return float(np.trace(s) / max(s.sum(), 1))
+
+
+class ShardedEngine(Engine):
+    """Drop-in ``Engine`` whose bulk streams span a device mesh.
+
+    ``mesh``: None (all visible devices), an int shard count, or a 1-D
+    ``jax.sharding.Mesh``. Everything else matches ``Engine``; a 1-shard
+    mesh degenerates to single-device behaviour (and is how the parity
+    harness anchors the collective path to the oracle).
+    """
+
+    def __init__(self, mesh=None, *, tile_size: int = 16384,
+                 optimize: bool = True, use_kernel: bool = False):
+        super().__init__(tile_size=tile_size, optimize=optimize,
+                         use_kernel=use_kernel)
+        self.mesh = as_mesh(mesh)
+        self.axis = self.mesh.axis_names[0]
+        self.num_shards = int(self.mesh.shape[self.axis])
+        self._shard_fns: Dict[tuple, object] = {}
+        self.last_shard_stats: Optional[ShardStats] = None
+
+    # -- static padding to the mesh-divisible shapes shard_map needs --------
+    # (table padding/unpadding lives *inside* the jitted _build graph so a
+    # non-divisible table never pays a separate eager O(table) concatenate
+    # per call; only the small index/valid streams are padded here)
+
+    def _pad_stream(self, idx: jax.Array, valid=None):
+        n = int(idx.shape[0])
+        per = -(-n // self.num_shards)
+        pad = per * self.num_shards - n
+        if pad:
+            idx = jnp.concatenate([idx, jnp.zeros((pad,), idx.dtype)])
+        mask = jnp.arange(per * self.num_shards, dtype=jnp.int32) < n
+        if valid is not None:
+            if pad:
+                valid = jnp.concatenate([valid, jnp.zeros((pad,), bool)])
+            mask = mask & valid
+        return idx, mask, per
+
+    # -- sharded bulk ops ----------------------------------------------------
+
+    def sharded_gather(self, table, idx, *, valid=None) -> jax.Array:
+        """``C = table[idx]`` with the reorder→coalesce pipeline running
+        owner-locally on every shard; sets ``last_shard_stats``.
+
+        ``valid``: optional (len(idx),) bool mask — lanes marked False
+        never enter the exchange (no fabric traffic, excluded from stats)
+        and read 0. Lets callers with statically padded streams (the
+        scheduler's coalesce padding) keep shapes — and hence the cached
+        shard_map trace — stable instead of slicing to a data-dependent
+        length."""
+        table = jnp.asarray(table)
+        idx = jnp.asarray(idx).astype(jnp.int32)
+        n = int(idx.shape[0])
+        if n == 0:
+            self.last_shard_stats = None
+            return table[idx]
+        rows_per = -(-int(table.shape[0]) // self.num_shards)
+        idx_p, mask, per = self._pad_stream(idx, valid)
+        fn = self._shard_fn("gather", rows_per, per)
+        out, sent, recv, uniq = fn(table, idx_p, mask)
+        self._record_stats(sent, recv, uniq)
+        return out[:n]
+
+    def sharded_rmw(self, table, idx, values, *, op: str = "ADD"):
+        """``table[idx] op= values`` across the mesh: cross-shard duplicate
+        destinations merge owner-locally (segment combine) before the
+        single unique-scatter touches each table shard. ``op`` must be in
+        ``isa.RMW_OPS`` (associative + commutative — §3.1)."""
+        if op not in isa.RMW_OPS:
+            raise ValueError(f"op {op!r} not in RMW_OPS {isa.RMW_OPS} "
+                             "(sharded RMW needs reorder-safe combines)")
+        table = jnp.asarray(table)
+        idx = jnp.asarray(idx).astype(jnp.int32)
+        n = int(idx.shape[0])
+        if n == 0:
+            self.last_shard_stats = None
+            return table
+        values = jnp.asarray(values).reshape(
+            (n,) + table.shape[1:]).astype(table.dtype)
+        rows_per = -(-int(table.shape[0]) // self.num_shards)
+        idx_p, valid, per = self._pad_stream(idx)
+        pad = per * self.num_shards - n
+        if pad:
+            values = jnp.concatenate(
+                [values, jnp.zeros((pad,) + values.shape[1:], values.dtype)])
+        fn = self._shard_fn("rmw", rows_per, per, op)
+        new_table, sent, recv, uniq = fn(table, idx_p, valid, values)
+        self._record_stats(sent, recv, uniq)
+        return new_table
+
+    # -- scheduler batch fan-out --------------------------------------------
+
+    def _constrain_batch(self, stacked: Dict) -> Dict:
+        """Place the stacked lane axis of a batched program group across
+        the mesh: N grouped programs execute as num_shards device-local
+        sub-batches of one SPMD computation."""
+        if self.num_shards == 1:
+            return stacked
+        spec = NamedSharding(self.mesh, P(self.axis))
+        return {k: (jax.lax.with_sharding_constraint(v, spec)
+                    if v.shape[0] % self.num_shards == 0 else v)
+                for k, v in stacked.items()}
+
+    # -- shard_map builders (cached per static geometry) ---------------------
+
+    def _shard_fn(self, kind: str, rows_per: int, per: int,
+                  op: str | None = None):
+        key = (kind, rows_per, per, op)
+        fn = self._shard_fns.get(key)
+        if fn is None:
+            fn = self._build(kind, rows_per, per, op)
+            self._shard_fns[key] = fn
+        return fn
+
+    def _build(self, kind: str, rows_per: int, per: int, op: str | None):
+        ns, axis = self.num_shards, self.axis
+        sort = dedup = self.optimize
+
+        def _route(idx_l, valid_l):
+            send_idx, send_valid, order, slot, sent = \
+                exchange.partition_by_owner(idx_l, valid_l,
+                                            rows_per=rows_per, num_shards=ns)
+            recv_idx = jax.lax.all_to_all(send_idx, axis, 0, 0, tiled=True)
+            recv_valid = jax.lax.all_to_all(send_valid, axis, 0, 0,
+                                            tiled=True)
+            # every valid received index is owner-local by construction, so
+            # shard_bulk_indices' local component IS the local row
+            _, local_idx = reorder.shard_bulk_indices(
+                recv_idx, num_shards=ns, n_rows=rows_per * ns)
+            local = jnp.where(recv_valid, local_idx, 0)
+            n_recv = jnp.sum(recv_valid.astype(jnp.int32))
+            n_uniq = exchange.masked_unique_count(local, recv_valid)
+            return order, slot, sent, local, recv_valid, n_recv, n_uniq
+
+        def gather_shard(table_l, idx_l, valid_l):
+            order, slot, sent, local, _, n_recv, n_uniq = \
+                _route(idx_l, valid_l)
+            vals = bulk_ops.bulk_gather(table_l, local, sort=sort,
+                                        dedup=dedup)
+            back = jax.lax.all_to_all(vals, axis, 0, 0, tiled=True)
+            out = exchange.unpack_result(back, order, slot, valid_l)
+            return out, sent, n_recv[None], n_uniq[None]
+
+        def rmw_shard(table_l, idx_l, valid_l, vals_l):
+            order, slot, sent, local, recv_valid, n_recv, n_uniq = \
+                _route(idx_l, valid_l)
+            send_vals = exchange.pack_payload(vals_l, order, slot,
+                                              num_shards=ns)
+            recv_vals = jax.lax.all_to_all(send_vals, axis, 0, 0, tiled=True)
+            # owner-local combine-then-scatter: bulk_rmw's segment reduction
+            # merges cross-shard duplicates before the table is touched
+            new_l = bulk_ops.bulk_rmw(table_l, local, recv_vals, op=op,
+                                      cond=recv_valid, optimize=True)
+            return new_l, sent, n_recv[None], n_uniq[None]
+
+        sharded = P(axis)
+        pad_rows = rows_per * ns
+
+        def _pad_table(table):
+            # inside the jit: the pad fuses with the resharding transfer
+            # instead of materializing an eager full copy per call
+            pr = pad_rows - table.shape[0]
+            if pr:
+                table = jnp.concatenate(
+                    [table, jnp.zeros((pr,) + table.shape[1:], table.dtype)])
+            return table
+
+        if kind == "gather":
+            smfn = shard_map(gather_shard, mesh=self.mesh,
+                             in_specs=(sharded, sharded, sharded),
+                             out_specs=(sharded,) * 4)
+
+            def fn(table, idx, valid):
+                return smfn(_pad_table(table), idx, valid)
+        elif kind == "rmw":
+            smfn = shard_map(rmw_shard, mesh=self.mesh,
+                             in_specs=(sharded,) * 4,
+                             out_specs=(sharded,) * 4)
+
+            def fn(table, idx, valid, vals):
+                new, sent, recv, uniq = smfn(_pad_table(table), idx, valid,
+                                             vals)
+                return new[:table.shape[0]], sent, recv, uniq
+        else:
+            raise ValueError(kind)
+        return jax.jit(fn)
+
+    def _record_stats(self, sent, recv, uniq):
+        # reshape only — no host transfer here, so back-to-back sharded
+        # calls (a flush over many tables) keep dispatching asynchronously
+        ns = self.num_shards
+        self.last_shard_stats = ShardStats(
+            sent=sent.reshape(ns, ns), received=recv, unique=uniq)

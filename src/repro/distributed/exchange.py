@@ -1,0 +1,105 @@
+"""Owner partitioning + the ragged-to-static exchange discipline.
+
+The multi-accelerator deployment of paper §6.6 splits the address range
+across units; every bulk index stream must then be routed to the shard that
+owns each row. The per-owner sub-streams are *ragged* (data dependent), but
+XLA collectives need static shapes — the same problem ``RowTablePlan``
+solves for row-table tiles, solved the same way: a static per-shard
+capacity plus validity counts. Each shard packs its local requests into a
+``(num_shards, L)`` bucket buffer (capacity ``L`` = the local stream
+length, the worst case where every index targets one owner, so overflow is
+impossible by construction); ``jax.lax.all_to_all(..., tiled=True)`` then
+swaps bucket ``j`` of shard ``i`` with bucket ``i`` of shard ``j``.
+
+Everything here is static-shape jnp, fully jittable, and collective-free —
+the collectives live in ``distributed.engine`` so these primitives stay
+unit-testable on a single device.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import reorder
+
+
+def partition_by_owner(idx: jax.Array, valid: jax.Array, *, rows_per: int,
+                       num_shards: int):
+    """Pack a local request stream into static per-owner buckets.
+
+    Args:
+      idx:   (L,) global row indices (arbitrary content on invalid lanes).
+      valid: (L,) bool validity mask (the ragged length, made static).
+      rows_per: rows owned by each shard (equal address-range split —
+        ``reorder.shard_bulk_indices``'s layout).
+      num_shards: shard count.
+
+    Returns ``(send_idx, send_valid, order, slot, sent_counts)``:
+      send_idx    (num_shards*L,) int32: bucket ``o`` (= slice
+                  ``[o*L:(o+1)*L]``) holds the indices owned by shard ``o``,
+                  in stream order, zero-padded;
+      send_valid  (num_shards*L,) bool: validity of each bucket lane;
+      order       (L,) int32: stable owner-sort permutation of the stream
+                  (``idx[order]`` is bucket-major) — the key for unpacking
+                  the inverse exchange;
+      slot        (L,) int32: bucket position of the k-th *sorted* lane
+                  (``num_shards*L`` = dropped, for invalid lanes);
+      sent_counts (num_shards,) int32: valid lanes sent to each owner.
+    """
+    L = int(idx.shape[0])
+    idx = idx.astype(jnp.int32)
+    owner, _ = reorder.shard_bulk_indices(
+        idx, num_shards=num_shards, n_rows=rows_per * num_shards)
+    owner = jnp.clip(owner, 0, num_shards - 1)   # garbage on invalid lanes
+    # invalid lanes sort last (owner key num_shards) and drop out of the
+    # buffer via an out-of-range slot + mode="drop"
+    key = jnp.where(valid, owner, num_shards)
+    order = jnp.argsort(key, stable=True)
+    s_key = key[order]
+    counts = jax.ops.segment_sum(jnp.ones((L,), jnp.int32), key,
+                                 num_segments=num_shards + 1)[:num_shards]
+    start = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(L, dtype=jnp.int32)
+    rank = pos - start[jnp.clip(s_key, 0, num_shards - 1)]
+    slot = jnp.where(s_key < num_shards, s_key * L + rank,
+                     num_shards * L).astype(jnp.int32)
+    send_idx = jnp.zeros((num_shards * L,), jnp.int32).at[slot].set(
+        idx[order], mode="drop")
+    send_valid = jnp.zeros((num_shards * L,), bool).at[slot].set(
+        valid[order], mode="drop")
+    return send_idx, send_valid, order, slot, counts
+
+
+def pack_payload(payload: jax.Array, order: jax.Array, slot: jax.Array,
+                 *, num_shards: int) -> jax.Array:
+    """Scatter a per-lane payload (RMW values) into the same bucket layout
+    ``partition_by_owner`` produced for its indices."""
+    L = int(order.shape[0])
+    out = jnp.zeros((num_shards * L,) + payload.shape[1:], payload.dtype)
+    return out.at[slot].set(payload[order], mode="drop")
+
+
+def unpack_result(bucket_vals: jax.Array, order: jax.Array,
+                  slot: jax.Array, valid: jax.Array) -> jax.Array:
+    """Read per-lane results back out of a returned bucket buffer
+    (the inverse exchange's output), restoring stream order; invalid
+    lanes read 0."""
+    L = int(order.shape[0])
+    picked = bucket_vals[jnp.clip(slot, 0, bucket_vals.shape[0] - 1)]
+    out = jnp.zeros((L,) + bucket_vals.shape[1:], bucket_vals.dtype)
+    out = out.at[order].set(picked)
+    mshape = (-1,) + (1,) * (out.ndim - 1)
+    return jnp.where(valid.reshape(mshape), out, 0)
+
+
+def masked_unique_count(idx: jax.Array, valid: jax.Array) -> jax.Array:
+    """Number of distinct values among the valid lanes (a shard's
+    owner-local coalescing statistic). Static-shape: invalid lanes sort to
+    the top as int32-max sentinels and are excluded by the valid count."""
+    sentinel = jnp.iinfo(jnp.int32).max
+    s = jnp.sort(jnp.where(valid, idx.astype(jnp.int32), sentinel))
+    nv = jnp.sum(valid.astype(jnp.int32))
+    k = jnp.arange(s.shape[0], dtype=jnp.int32)
+    first = (k == 0) | (s != jnp.concatenate([s[:1], s[:-1]]))
+    return jnp.sum(((k < nv) & first).astype(jnp.int32))

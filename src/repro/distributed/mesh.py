@@ -1,0 +1,51 @@
+"""1-D 'shards' mesh helpers for the distributed bulk-access engine.
+
+Distinct from ``repro.launch.mesh`` (the 2-D data/model training mesh):
+the access engine partitions the *address range* over a single axis, the
+multi-accelerator deployment of paper §6.6. On a CPU-only host, force a
+multi-device mesh with
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8
+
+before the first JAX import (the CI `sharded` job and
+``benchmarks/sharded_bench.py`` both run this way).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+DEFAULT_AXIS = "shards"
+
+
+def device_mesh(num_shards: int | None = None, *,
+                axis: str = DEFAULT_AXIS) -> Mesh:
+    """A 1-D mesh over the first ``num_shards`` visible devices
+    (default: all of them)."""
+    devs = jax.devices()
+    n = len(devs) if num_shards is None else int(num_shards)
+    if n < 1:
+        raise ValueError(f"num_shards must be >= 1, got {n}")
+    if n > len(devs):
+        raise ValueError(
+            f"requested a {n}-shard mesh but only {len(devs)} device(s) "
+            "are visible; on a CPU host set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+            "before the first JAX import")
+    return Mesh(np.asarray(devs[:n]), (axis,))
+
+
+def as_mesh(mesh, *, axis: str = DEFAULT_AXIS) -> Mesh:
+    """Coerce ``None`` (all devices) / an int (shard count) / a ``Mesh``
+    into a 1-D mesh usable by the sharded engine."""
+    if mesh is None or isinstance(mesh, int):
+        return device_mesh(mesh, axis=axis)
+    if isinstance(mesh, Mesh):
+        if len(mesh.axis_names) != 1:
+            raise ValueError(
+                f"sharded engine needs a 1-D mesh, got axes "
+                f"{mesh.axis_names}")
+        return mesh
+    raise TypeError(f"mesh must be None, an int or a jax Mesh, got "
+                    f"{type(mesh).__name__}")

@@ -31,14 +31,29 @@ class AccessService:
 
     ``auto_flush``: pending-submission threshold that triggers a flush on
     the next submit (0 disables auto-flushing; callers then flush/wait).
+
+    ``mesh``: None for the single-device engine, or an int shard count /
+    1-D ``jax.sharding.Mesh`` to back the service with a
+    ``distributed.ShardedEngine`` — fused gathers and batched program
+    groups then span the mesh, and each ``FlushReport`` carries the
+    per-shard exchange stats (``shard_stats``).
     """
 
     def __init__(self, scheduler: Optional[Scheduler] = None, *,
                  tile_size: int = 16384, optimize: bool = True,
-                 max_batch: int = 32, auto_flush: int = 16):
-        self.scheduler = scheduler if scheduler is not None else Scheduler(
-            engine=Engine(tile_size=tile_size, optimize=optimize),
-            max_batch=max_batch)
+                 max_batch: int = 32, auto_flush: int = 16, mesh=None):
+        if scheduler is None:
+            if mesh is not None:
+                from repro.distributed import ShardedEngine
+                engine = ShardedEngine(mesh, tile_size=tile_size,
+                                       optimize=optimize)
+            else:
+                engine = Engine(tile_size=tile_size, optimize=optimize)
+            scheduler = Scheduler(engine=engine, max_batch=max_batch)
+        elif mesh is not None:
+            raise ValueError("pass either a prebuilt scheduler or a mesh, "
+                             "not both")
+        self.scheduler = scheduler
         self.auto_flush = int(auto_flush)
         self.last_report: Optional[FlushReport] = None
 

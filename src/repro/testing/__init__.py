@@ -16,6 +16,9 @@ from repro.testing.fuzzer import FuzzCase, generate_case
 from repro.testing.harness import (CONFIG_MATRIX, EAGER_CONFIGS,
                                    JIT_CONFIGS, EngineConfig, ParityError,
                                    check_case_parity, check_pattern_parity,
+                                   check_scheduler_parity,
+                                   check_sharded_parity,
+                                   default_sharded_cases,
                                    rotating_configs, run_engine_tiled)
 from repro.testing.oracle import (NP_DTYPES, OracleEngine, eval_expr,
                                   oracle_run_tiled, run_pattern)
@@ -24,6 +27,8 @@ __all__ = [
     "conformance_names", "build_conformance", "FuzzCase", "generate_case",
     "CONFIG_MATRIX", "EAGER_CONFIGS", "JIT_CONFIGS", "EngineConfig",
     "ParityError", "check_case_parity", "check_pattern_parity",
+    "check_scheduler_parity", "check_sharded_parity",
+    "default_sharded_cases",
     "rotating_configs", "run_engine_tiled", "NP_DTYPES", "OracleEngine",
     "eval_expr", "oracle_run_tiled", "run_pattern",
 ]

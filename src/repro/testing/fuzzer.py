@@ -159,8 +159,14 @@ class _Gen:
         """CSR-style offsets H (+ optional indirection K): returns RangeLoop
         and records the inner var's value bound."""
         rng = self.rng
-        # short ranges so even TILE=64 rarely truncates
-        lens = rng.integers(0, 3, size=self.n)
+        if rng.random() < 0.125:
+            # empty frontier: every range [lo, hi) is zero-length (a BFS
+            # whose frontier drained — legal Table-1 input). Keeps the
+            # nightly sweep exercising the range fuser's total==0 path.
+            lens = np.zeros(self.n, np.int64)
+        else:
+            # short ranges so even TILE=64 rarely truncates
+            lens = rng.integers(0, 3, size=self.n)
         H = np.zeros(self.n + 1, np.int32)
         H[1:] = np.cumsum(lens)
         h_name = self._name("H")

@@ -25,10 +25,10 @@ from typing import Dict, Mapping, Sequence
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import compiler
+from repro.core import compiler, isa
 from repro.core.engine import Engine
 from repro.core.scheduler import Scheduler
-from repro.testing import oracle
+from repro.testing import oracle, streams
 from repro.testing.fuzzer import FuzzCase
 
 TILE_SIZES = (64, 1024, 16384)
@@ -225,6 +225,118 @@ def check_scheduler_parity(cases: Sequence, *, tile_size: int = 1024,
                           gspd[name], ospd[name], rtol=rtol, atol=atol)
             checked += 1
     return checked, report
+
+
+def _np_rmw(table: np.ndarray, idx: np.ndarray, vals: np.ndarray,
+            op: str) -> np.ndarray:
+    """Sequential per-lane RMW ground truth (mirrors ``OracleEngine``'s
+    IRMW loop): naive program order, no sorting, no segment combines."""
+    out = np.array(table)
+    vals = vals.reshape((idx.shape[0],) + out.shape[1:]).astype(out.dtype)
+    for k in range(idx.shape[0]):
+        a = int(idx[k])
+        out[a:a + 1] = oracle.np_alu(op, out[a:a + 1], vals[k:k + 1])
+    return out
+
+
+def default_sharded_cases(seed: int = 0, *, n_rows: int = 257,
+                          n_idx: int = 603) -> list:
+    """Fuzzed gather / scatter-RMW streams for ``check_sharded_parity``.
+
+    Index distributions span the paper's microbenchmark regimes (uniform,
+    zipf-skewed, blocked) plus the sharding-specific hazards: rows sitting
+    exactly on the owner boundaries of every mesh size in {2, 4, 8}, an
+    all-duplicates stream, and an empty stream. RMW cases cover every
+    ``RMW_OPS`` combine on an integer table (order-independent mod 2^32,
+    hence bit-exact however shards merge) plus a float ADD checked to
+    tolerance (§3.1: float reductions are legally reordered).
+    """
+    rng = np.random.default_rng(seed)
+
+    def stream(kind: str, n: int = n_idx) -> np.ndarray:
+        if kind in ("uniform", "zipf", "blocked"):
+            return streams.make_indices(rng, n_rows, n, kind)
+        if kind == "boundary":
+            edges = [0, n_rows - 1]
+            for m in (2, 4, 8):
+                rows_per = -(-n_rows // m)
+                edges += [k * rows_per for k in range(m)]
+                edges += [k * rows_per - 1 for k in range(1, m)]
+            edges = np.unique(np.clip(edges, 0, n_rows - 1))
+            return rng.choice(edges, size=n).astype(np.int32)
+        if kind == "dup":
+            return np.full(n, int(rng.integers(0, n_rows)), np.int32)
+        raise ValueError(kind)
+
+    t1 = rng.normal(size=(n_rows,)).astype(np.float32)
+    t2 = rng.normal(size=(n_rows, 6)).astype(np.float32)
+    ti = rng.integers(0, 2 ** 15, size=(n_rows,)).astype(np.int32)
+    cases = []
+    for kind in ("uniform", "zipf", "blocked", "boundary", "dup"):
+        cases.append(("gather", t1, stream(kind)))
+    cases.append(("gather", t2, stream("uniform")))
+    cases.append(("gather", t1, np.zeros((0,), np.int32)))
+    for op in isa.RMW_OPS:
+        vals = rng.integers(0, 2 ** 10, size=n_idx).astype(np.int32)
+        cases.append(("rmw", ti, stream("zipf"), vals, op))
+    cases.append(("rmw", t1, stream("zipf"),
+                  rng.normal(size=n_idx).astype(np.float32), "ADD"))
+    return cases
+
+
+def check_sharded_parity(cases: Sequence | None = None, *,
+                         mesh_sizes: Sequence[int] = (1, 2, 4, 8),
+                         seed: int = 0, rtol: float = 1e-5,
+                         atol: float = 1e-6, require_all: bool = False):
+    """Sharded-engine parity: every mesh size vs the single-device NumPy
+    oracle.
+
+    ``cases``: ``("gather", table, idx)`` / ``("rmw", table, idx, vals,
+    op)`` tuples (default: ``default_sharded_cases(seed)``). Gathers must
+    be **bit-exact** (zero tolerance, floats included — no arithmetic
+    happens); RMWs are bit-exact on integer tables (every ``RMW_OPS``
+    combine is order-independent mod 2^32 — ``_assert_match`` uses
+    ``array_equal`` for ints) and allclose on floats, whose reduction
+    order the engine legally changes (§3.1).
+
+    Mesh sizes exceeding the visible device count are skipped unless
+    ``require_all`` (the CI ``sharded`` job forces 8 host devices via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+    Returns ``(checked, ran_mesh_sizes)``.
+    """
+    import jax
+    from repro.distributed import ShardedEngine
+    if cases is None:
+        cases = default_sharded_cases(seed)
+    n_dev = len(jax.devices())
+    checked, ran = 0, []
+    for m in mesh_sizes:
+        if m > n_dev:
+            if require_all:
+                raise ValueError(
+                    f"mesh size {m} needs {m} devices, have {n_dev}; set "
+                    f"XLA_FLAGS=--xla_force_host_platform_device_count={m}")
+            continue
+        eng = ShardedEngine(mesh=int(m))
+        ran.append(m)
+        for k, case in enumerate(cases):
+            if case[0] == "gather":
+                _, table, idx = case
+                got = eng.sharded_gather(table, idx)
+                want = np.asarray(table)[np.asarray(idx)]
+                _assert_match(f"[mesh={m} case{k} gather] vs NumPy oracle",
+                              got, want, rtol=0, atol=0)
+            elif case[0] == "rmw":
+                _, table, idx, vals, op = case
+                got = eng.sharded_rmw(table, idx, vals, op=op)
+                want = _np_rmw(np.asarray(table), np.asarray(idx),
+                               np.asarray(vals), op)
+                _assert_match(f"[mesh={m} case{k} rmw:{op}] vs NumPy "
+                              "oracle", got, want, rtol=rtol, atol=atol)
+            else:
+                raise ValueError(f"unknown case kind {case[0]!r}")
+            checked += 1
+    return checked, ran
 
 
 def check_case_parity(case: FuzzCase,

@@ -1,11 +1,14 @@
-"""Edge cases for reorder.coalesce / make_row_table_plan (satellite of the
-differential-testing PR): empty streams, all-duplicates, partial last
-blocks, and n_unique when the max value is itself duplicated."""
+"""Edge cases for reorder.coalesce / fuse_ranges / make_row_table_plan:
+empty streams, all-duplicates, partial last blocks, n_unique when the max
+value is itself duplicated, static-size truncation overflow, and the
+empty-frontier range loop."""
+import jax
 import numpy as np
 import jax.numpy as jnp
+import pytest
 
 from repro.core import (bulk_gather, bulk_rmw, bulk_scatter, coalesce,
-                        make_row_table_plan)
+                        fuse_ranges, make_row_table_plan)
 from repro.core.isa import RMW_OPS
 from repro.kernels.gather import ops as gops
 
@@ -43,6 +46,70 @@ class TestCoalesceEdges:
         uniq, inv, n_u = coalesce(jnp.asarray([9], jnp.int32))
         assert int(n_u) == 1
         np.testing.assert_array_equal(np.asarray(uniq), [9])
+
+
+class TestCoalesceTruncation:
+    """size < n_unique used to silently truncate: jnp.unique(..., size=k)
+    keeps inverse positions into the *untruncated* unique array, so
+    entries >= k indexed past the result and JAX's clamping gather
+    misread the last row with no error."""
+
+    def test_overflow_raises_eagerly(self):
+        idx = jnp.asarray([0, 1, 2, 3, 4], jnp.int32)   # 5 unique
+        with pytest.raises(ValueError, match="do not fit"):
+            coalesce(idx, size=3)
+
+    def test_overflow_clamps_under_trace(self):
+        # inside jit we cannot raise on data: inverse must stay in range
+        idx = jnp.asarray([10, 20, 30, 40, 50], jnp.int32)
+        uniq, inv, n_u = jax.jit(lambda x: coalesce(x, size=3))(idx)
+        assert uniq.shape == (3,)
+        assert int(jnp.max(inv)) <= 2 and int(jnp.min(inv)) >= 0
+        assert int(n_u) <= 3
+
+    def test_exact_fit_still_works(self):
+        idx = jnp.asarray([7, 7, 7, 2, 2, 7], jnp.int32)  # 2 unique, size 2
+        uniq, inv, n_u = coalesce(idx, size=2)
+        assert int(n_u) == 2
+        np.testing.assert_array_equal(
+            np.asarray(uniq)[np.asarray(inv)], np.asarray(idx))
+
+    def test_pad_value_invariants_size_gt_n(self):
+        # padding must use the max value (keeps the array sorted for the
+        # row-table plan) and must not inflate n_unique
+        idx = jnp.asarray([5, 3, 5, 1], jnp.int32)
+        uniq, inv, n_u = coalesce(idx, size=9)
+        u = np.asarray(uniq)
+        assert u.shape == (9,)
+        assert int(n_u) == 3
+        assert (np.diff(u) >= 0).all()
+        np.testing.assert_array_equal(u[3:], [5] * 6)   # max-value padding
+        np.testing.assert_array_equal(u[np.asarray(inv)], np.asarray(idx))
+
+
+class TestFuseRangesEmpty:
+    def test_empty_frontier(self):
+        # zero outer iterations (drained BFS frontier) used to raise
+        # TypeError ("Slice size ... out of range") from lo[outer]
+        e = jnp.zeros((0,), jnp.int32)
+        outer, inner, total = fuse_ranges(e, e, capacity=16)
+        assert outer.shape == inner.shape == (16,)
+        assert int(total) == 0
+        np.testing.assert_array_equal(np.asarray(outer), 0)
+        np.testing.assert_array_equal(np.asarray(inner), 0)
+
+    def test_empty_frontier_with_cond(self):
+        e = jnp.zeros((0,), jnp.int32)
+        _, _, total = fuse_ranges(e, e, capacity=4,
+                                  cond=jnp.zeros((0,), bool))
+        assert int(total) == 0
+
+    def test_all_zero_length_ranges_nonempty_frontier(self):
+        # the neighbouring case: n > 0 outer iterations, every range empty
+        lo = jnp.asarray([3, 5, 9], jnp.int32)
+        outer, inner, total = fuse_ranges(lo, lo, capacity=8)
+        assert int(total) == 0
+        np.testing.assert_array_equal(np.asarray(outer), 0)
 
 
 class TestEmptyBulkOps:
