@@ -20,12 +20,14 @@ from pathlib import Path
 
 
 def main() -> None:
-    from benchmarks import (common, locality, microbench, scheduler_bench,
-                            sharded_bench, tilesize, workloads)
+    from benchmarks import (common, locality, microbench, pipeline_bench,
+                            scheduler_bench, sharded_bench, tilesize,
+                            workloads)
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("only", nargs="?", default=None,
                     choices=("microbench", "locality", "workloads",
-                             "tilesize", "scheduler", "sharded"),
+                             "tilesize", "scheduler", "sharded",
+                             "pipeline"),
                     help="run a single module (default: all)")
     ap.add_argument("--json", action="store_true",
                     help="write BENCH_<module>.json in the cwd")
@@ -35,7 +37,8 @@ def main() -> None:
     for name, mod in (("microbench", microbench), ("locality", locality),
                       ("workloads", workloads), ("tilesize", tilesize),
                       ("scheduler", scheduler_bench),
-                      ("sharded", sharded_bench)):
+                      ("sharded", sharded_bench),
+                      ("pipeline", pipeline_bench)):
         if args.only and args.only != name:
             continue
         print(f"# --- {name} ---", flush=True)

@@ -1,0 +1,20 @@
+"""repro.apps — end-to-end iterative applications on the access engine.
+
+One app per Table-1 domain, each runnable eager, pipelined single-device,
+and pipelined across a ``ShardedEngine`` mesh, each bit-exact against a
+sequential NumPy oracle (``testing.harness.check_app_parity``):
+
+  spmv      SpMV power iteration      (scientific — NAS CG shape)
+  bfs       level-synchronous BFS push (graph — GAP BFS, range fuser)
+  hashjoin  hash-join probe            (database — conditional ILD/IST)
+
+Every app exposes ``make_problem``/``make_graph``, ``reference`` (the
+oracle), ``run(..., mode=, mesh=)`` and a seeded ``demo``/
+``demo_reference`` pair that the parity harness and the pipeline
+benchmark share.
+"""
+from repro.apps import bfs, hashjoin, spmv
+
+APPS = {"spmv": spmv, "bfs": bfs, "hashjoin": hashjoin}
+
+__all__ = ["spmv", "bfs", "hashjoin", "APPS"]

@@ -12,6 +12,15 @@ pages, expert buffers). 2-D paths can use the Pallas row-table kernels
 (`use_kernel=True`, default on TPU-shaped inputs); 1-D paths use fused XLA.
 All fall back to reference behaviour under ``optimize=False`` so every paper
 baseline is runnable.
+
+Out-of-range index policy (DESIGN.md §"OOB policy"): **loads clamp, stores
+drop**. ``bulk_gather`` clamps every index into ``[0, n-1)`` — negatives to
+row 0, overshoots to the last row — on every path (optimize on/off, kernel
+on/off), so a gather can never fault and never wraps Python-style.
+``bulk_scatter``/``bulk_rmw`` route negative and ``>= n`` destinations out
+of range and drop them (``mode="drop"``), on every path. The NumPy oracle
+and the Pallas kernel refs implement the same policy, so OOB streams are
+parity-checked, not UB.
 """
 from __future__ import annotations
 
@@ -83,7 +92,9 @@ def bulk_gather(table: jax.Array, idx: jax.Array, *, sort: bool = True,
     (TPU target; interpret=True executes it on CPU for validation).
     """
     idx = idx.astype(jnp.int32)
-    flat_idx = idx.reshape(-1)
+    # loads clamp (policy): negatives to row 0, >= n to the last row — on
+    # every path, so optimize on/off cannot disagree about OOB streams
+    flat_idx = jnp.clip(idx.reshape(-1), 0, table.shape[0] - 1)
     if not sort and not dedup:
         out = table[flat_idx]
         return out.reshape(idx.shape + table.shape[1:])
@@ -130,6 +141,11 @@ def bulk_scatter(table: jax.Array, idx: jax.Array, values: jax.Array, *,
     if idx.shape[0] == 0:
         return table
     values = values.reshape((idx.shape[0],) + table.shape[1:])
+    # stores drop (policy): negative and >= n destinations are routed to the
+    # one-past-the-end row that mode="drop" discards (negatives would
+    # otherwise wrap Python-style inside jnp scatters)
+    idx = jnp.where((idx >= 0) & (idx < table.shape[0]), idx,
+                    table.shape[0])
     if cond is not None:
         cond = cond.reshape(-1)
         # route masked lanes out of range; mode="drop" discards them.
@@ -166,6 +182,10 @@ def bulk_rmw(table: jax.Array, idx: jax.Array, values: jax.Array, *,
         return table
     values = values.reshape((idx.shape[0],) + table.shape[1:])
     ident = rmw_identity(op, table.dtype)
+    # stores drop (policy): route negative/OOB destinations past the end so
+    # every path below discards them (XLA would wrap negatives instead)
+    idx = jnp.where((idx >= 0) & (idx < table.shape[0]), idx,
+                    table.shape[0])
     if cond is not None:
         cond = cond.reshape(-1)
         cshape = (-1,) + (1,) * (values.ndim - 1)
@@ -174,13 +194,13 @@ def bulk_rmw(table: jax.Array, idx: jax.Array, values: jax.Array, *,
         # naive baseline: XLA scatter with duplicate indices (serialized on
         # real hardware; the paper's RMW-Atomic analogue).
         if op == "ADD":
-            return table.at[idx].add(values)
+            return table.at[idx].add(values, mode="drop")
         if op == "MAX":
-            return table.at[idx].max(values)
+            return table.at[idx].max(values, mode="drop")
         if op == "MIN":
-            return table.at[idx].min(values)
+            return table.at[idx].min(values, mode="drop")
         if op == "MUL":
-            return table.at[idx].multiply(values)
+            return table.at[idx].multiply(values, mode="drop")
         raise ValueError(op)
     # Bitwise ops have no XLA scatter mode, so both optimize settings take
     # the segment path below — exact either way (associative + commutative).

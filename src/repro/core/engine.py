@@ -226,7 +226,9 @@ class Engine:
             i = jnp.arange(ts, dtype=jnp.int32)
             count = jnp.where(jnp.asarray(count) < 0, ts, count)
             addr = start + i * stride
-            valid = i < count
+            # stores drop (policy): negative addresses route out with the
+            # invalid lanes instead of wrapping; >= n drops via mode="drop"
+            valid = (i < count) & (addr >= 0)
             cond = self._cond(spd, ins.tc)
             if cond is not None:
                 valid = valid & cond

@@ -101,10 +101,12 @@ def rmw_identity(op: str, dtype):
             return jnp.array(-jnp.inf, dt)
         return jnp.array(jnp.iinfo(dt).min, dt)
     if op == "AND":
-        return jnp.array(-1, dt) if jnp.issubdtype(dt, jnp.signedinteger) else ~jnp.zeros((), dt)
+        return (jnp.array(-1, dt) if jnp.issubdtype(dt, jnp.signedinteger)
+                else ~jnp.zeros((), dt))
     if op in ("OR", "XOR"):
         return jnp.zeros((), dt)
-    raise ValueError(f"op {op!r} is not a legal IRMW op (must be one of {RMW_OPS})")
+    raise ValueError(
+        f"op {op!r} is not a legal IRMW op (must be one of {RMW_OPS})")
 
 
 # ---------------------------------------------------------------------------

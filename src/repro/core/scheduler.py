@@ -82,6 +82,18 @@ class _GatherSubmission:
 
 
 @dataclasses.dataclass
+class _RmwSubmission:
+    ticket: Ticket
+    table: jax.Array
+    idx: jax.Array
+    values: jax.Array
+    op: str
+    cond: Optional[jax.Array]
+    table_id: int      # id() of the array the caller passed (fusion key)
+    table_ref: object  # strong ref keeping that id valid while queued
+
+
+@dataclasses.dataclass
 class FailedResult:
     """Stored in place of a result when the owning group's execution
     raised; ``Scheduler.result`` re-raises ``error``."""
@@ -95,7 +107,9 @@ class GroupReport:
     ``cross_coalescing`` maps region -> (cross-request gain, sum of
     per-request unique counts, fused unique count). It is computed lazily
     on first access — measurement is pure reporting and must not tax the
-    flush hot path.
+    flush hot path. The thunk reference is dropped on first
+    materialization: a long-lived report (``AccessService.last_report``)
+    must not pin the index streams the thunk closed over.
     """
     n_programs: int
     program_name: str
@@ -110,22 +124,87 @@ class GroupReport:
     @property
     def cross_coalescing(self) -> Dict[str, Tuple[float, int, int]]:
         if self._coalescing is None:
-            self._coalescing = (self._coalescing_thunk()
-                                if self._coalescing_thunk else {})
+            thunk, self._coalescing_thunk = self._coalescing_thunk, None
+            self._coalescing = thunk() if thunk else {}
         return self._coalescing
 
 
 @dataclasses.dataclass
 class FlushReport:
+    """Execution record of one flush window.
+
+    ``gather_coalescing`` maps table id -> (cross-request gain, sum of
+    per-request unique counts, fused unique count); ``rmw_coalescing``
+    maps (table id, op) likewise. Both are computed lazily on first access
+    — the streams they measure may still be in flight when the window
+    dispatches (the decoupled pipeline submits access chains built from
+    un-materialized arrays), and forcing them on the flush hot path would
+    sync the device. As with ``GroupReport``, the thunk reference is
+    dropped after first materialization so a long-lived report releases
+    the closed-over streams.
+    """
     order: Tuple[Tuple[str, int], ...]    # (tenant, tid) execution order
     groups: Tuple[GroupReport, ...]
     n_programs: int
     n_gathers: int
-    # table id -> (gain, per-request unique total, fused unique)
-    gather_coalescing: Dict[int, Tuple[float, int, int]]
-    # table id -> per-shard exchange/coalescing record (ShardStats), filled
-    # only when the backing engine spans a device mesh
-    shard_stats: Dict[int, object] = dataclasses.field(default_factory=dict)
+    # table id ("gather") / ("rmw", table id, op) -> per-shard exchange/
+    # coalescing record (ShardStats), filled only when the engine spans a
+    # device mesh
+    shard_stats: Dict[object, object] = dataclasses.field(
+        default_factory=dict)
+    n_rmws: int = 0
+    _gather_thunk: Optional[object] = dataclasses.field(
+        default=None, repr=False)
+    _gather_coalescing: Optional[Dict] = dataclasses.field(
+        default=None, repr=False)
+    _rmw_thunk: Optional[object] = dataclasses.field(
+        default=None, repr=False)
+    _rmw_coalescing: Optional[Dict] = dataclasses.field(
+        default=None, repr=False)
+
+    @property
+    def gather_coalescing(self) -> Dict[int, Tuple[float, int, int]]:
+        if self._gather_coalescing is None:
+            thunk, self._gather_thunk = self._gather_thunk, None
+            self._gather_coalescing = thunk() if thunk else {}
+        return self._gather_coalescing
+
+    @property
+    def rmw_coalescing(self) -> Dict[tuple, Tuple[float, int, int]]:
+        if self._rmw_coalescing is None:
+            thunk, self._rmw_thunk = self._rmw_thunk, None
+            self._rmw_coalescing = thunk() if thunk else {}
+        return self._rmw_coalescing
+
+
+class FlushHandle:
+    """Non-blocking handle for one dispatched flush window.
+
+    ``flush_async`` drains the queues and *dispatches* every group — JAX's
+    async dispatch means the XLA computations are in flight, not finished,
+    when it returns. ``poll()`` reports (without blocking) whether every
+    result retired by the window is resident; ``result()`` blocks until
+    they all are and returns the window's ``FlushReport``. Tickets stay
+    redeemable through ``Scheduler.poll``/``result`` exactly as for a
+    blocking flush — redeeming a ticket whose arrays are still in flight
+    simply hands back futures.
+    """
+
+    def __init__(self, report: FlushReport, leaves: tuple):
+        self.report = report
+        self._leaves = leaves
+
+    def poll(self) -> bool:
+        """True once every array retired by this window is resident."""
+        return all(leaf.is_ready() for leaf in self._leaves
+                   if hasattr(leaf, "is_ready"))
+
+    def result(self) -> FlushReport:
+        """Block until the window has fully retired; returns its report."""
+        if self._leaves:
+            jax.block_until_ready(list(self._leaves))
+            self._leaves = ()
+        return self.report
 
 
 # ---------------------------------------------------------------------------
@@ -158,18 +237,20 @@ class Scheduler:
         self.max_batch = int(max_batch)
         self._queue: List[_Submission] = []
         self._gather_queue: List[_GatherSubmission] = []
+        self._rmw_queue: List[_RmwSubmission] = []
         self._results: Dict[int, tuple] = {}
         self._next_tid = 0
         self._rr_cursor = 0          # rotates the round-robin start tenant
         self.stats = {"flushes": 0, "programs": 0, "gathers": 0,
-                      "vmap_groups": 0, "vmap_fallbacks": 0,
+                      "rmws": 0, "vmap_groups": 0, "vmap_fallbacks": 0,
                       "singleton_groups": 0, "group_errors": 0}
 
     # -- submission ----------------------------------------------------------
 
     @property
     def pending(self) -> int:
-        return len(self._queue) + len(self._gather_queue)
+        return (len(self._queue) + len(self._gather_queue)
+                + len(self._rmw_queue))
 
     def _ticket(self, tenant: str) -> Ticket:
         t = Ticket(self._next_tid, tenant)
@@ -212,6 +293,33 @@ class Scheduler:
         self._gather_queue.append(sub)
         return sub.ticket
 
+    def submit_rmw(self, table, idx, values, *, op: str = "ADD",
+                   cond=None, tenant: str = "core0") -> Ticket:
+        """Bulk RMW fast-path: ``table[idx] op= values`` with cross-request
+        fusion.
+
+        All pending RMWs with the same ``op`` against the same table object
+        are concatenated into ONE ``bulk_rmw`` (sort -> segment-combine ->
+        unique scatter) at flush time, so duplicate destinations across
+        tenants merge before touching memory. ``op`` must be in
+        ``isa.RMW_OPS`` (associative + commutative, §3.1). ``cond``: an
+        optional bool mask — False lanes are no-ops. The ticket resolves to
+        the table's state at the *end of the flush window* (after every
+        fused RMW group that touches it); gathers in the same window read
+        the window's initial state — don't mix reads and writes of one
+        table inside a window.
+        """
+        if op not in isa.RMW_OPS:
+            raise ValueError(f"op {op!r} not in RMW_OPS {isa.RMW_OPS}")
+        idx = jnp.asarray(idx).astype(jnp.int32).reshape(-1)
+        sub = _RmwSubmission(
+            self._ticket(tenant), jnp.asarray(table), idx,
+            jnp.asarray(values), op,
+            None if cond is None else jnp.asarray(cond).reshape(-1),
+            table_id=id(table), table_ref=table)
+        self._rmw_queue.append(sub)
+        return sub.ticket
+
     # -- retrieval -----------------------------------------------------------
 
     def poll(self, ticket: Ticket):
@@ -223,9 +331,9 @@ class Scheduler:
         """Retrieve (and forget) a result, flushing first if needed.
         Re-raises the execution error if this ticket's group failed."""
         if ticket.tid not in self._results:
-            if any(s.ticket.tid == ticket.tid for s in self._queue) or \
-                    any(s.ticket.tid == ticket.tid
-                        for s in self._gather_queue):
+            if any(s.ticket.tid == ticket.tid
+                   for q in (self._queue, self._gather_queue,
+                             self._rmw_queue) for s in q):
                 self.flush()
             if ticket.tid not in self._results:
                 raise KeyError(f"unknown ticket {ticket}")
@@ -266,11 +374,24 @@ class Scheduler:
     # -- execution -----------------------------------------------------------
 
     def flush(self) -> FlushReport:
-        """Drain the queues: group, batch, execute, retire results.
+        """Blocking flush: dispatch the window and wait for retirement.
 
-        A group whose execution raises does not poison the flush: its
-        members' tickets resolve to ``FailedResult`` (re-raised by
-        ``result``) and every other group still executes.
+        A thin wrapper over ``flush_async`` — the decoupled access/execute
+        pipeline (``repro.pipeline``) uses the async form directly so
+        iteration k+1's access window can dispatch while iteration k's
+        compute is still in flight.
+        """
+        return self.flush_async().result()
+
+    def flush_async(self) -> FlushHandle:
+        """Drain the queues: group, batch, dispatch, retire results.
+
+        Non-blocking: every group is *dispatched* (JAX async dispatch — the
+        XLA computations run behind the returned handle); ``poll``/
+        ``result`` on the ``FlushHandle`` observe/await retirement. A group
+        whose execution raises does not poison the flush: its members'
+        tickets resolve to ``FailedResult`` (re-raised by ``result``) and
+        every other group still executes.
         """
         cursor = self._rr_cursor
         self._rr_cursor += 1                 # once per flush, not per queue
@@ -301,24 +422,45 @@ class Scheduler:
         gq = self._fair_order(self._gather_queue, cursor)
         self._gather_queue = []
         try:
-            gather_stats, shard_stats = self._execute_gathers(gq)
+            gather_streams, shard_stats = self._execute_gathers(gq)
         except Exception as e:
             self.stats["group_errors"] += 1
-            gather_stats, shard_stats = {}, {}
+            gather_streams, shard_stats = {}, {}
             for sub in gq:
+                self._results.setdefault(sub.ticket.tid, FailedResult(e))
+
+        # RMWs retire after gathers: within one window, reads observe the
+        # window's initial table state and writes land at window end.
+        rq = self._fair_order(self._rmw_queue, cursor)
+        self._rmw_queue = []
+        try:
+            rmw_streams = self._execute_rmws(rq, shard_stats)
+        except Exception as e:
+            self.stats["group_errors"] += 1
+            rmw_streams = {}
+            for sub in rq:
                 self._results.setdefault(sub.ticket.tid, FailedResult(e))
 
         self.stats["flushes"] += 1
         self.stats["programs"] += len(order)
         self.stats["gathers"] += len(gq)
-        return FlushReport(
-            order=tuple((s.ticket.tenant, s.ticket.tid)
-                        for s in list(order) + list(gq)),
+        self.stats["rmws"] += len(rq)
+        retired = list(order) + list(gq) + list(rq)
+        report = FlushReport(
+            order=tuple((s.ticket.tenant, s.ticket.tid) for s in retired),
             groups=tuple(reports),
             n_programs=len(order),
             n_gathers=len(gq),
-            gather_coalescing=gather_stats,
-            shard_stats=shard_stats)
+            shard_stats=shard_stats,
+            n_rmws=len(rq),
+            _gather_thunk=(lambda s=gather_streams: {
+                k: reorder.cross_stream_gain(v) for k, v in s.items()}),
+            _rmw_thunk=(lambda s=rmw_streams: {
+                k: reorder.cross_stream_gain(v) for k, v in s.items()}))
+        leaves = jax.tree_util.tree_leaves(
+            [v for v in (self._results.get(s.ticket.tid) for s in retired)
+             if v is not None and not isinstance(v, FailedResult)])
+        return FlushHandle(report, tuple(leaves))
 
     def _execute_group(self, members: List[_Submission]) -> GroupReport:
         prog = members[0].program
@@ -379,13 +521,16 @@ class Scheduler:
         by_table: "OrderedDict[int, List[_GatherSubmission]]" = OrderedDict()
         for s in subs:
             by_table.setdefault(s.table_id, []).append(s)
-        stats = {}
+        stream_refs = {}
         shard_stats = {}
         sharded = getattr(self.engine, "sharded_gather", None)
         num_shards = int(getattr(self.engine, "num_shards", 1))
         for tid_key, group in by_table.items():
             table = group[0].table
-            streams = [s.idx for s in group]
+            # loads clamp (policy): the fused fetch sees the same clamped
+            # stream bulk_gather would, so the fast path cannot diverge
+            streams = [jnp.clip(s.idx, 0, table.shape[0] - 1)
+                       for s in group]
             unique_idx, inverses, n_unique = reorder.coalesce_streams(streams)
             if sharded is not None and table.shape[0] >= num_shards:
                 # the fused fetch spans the mesh: every row is served by
@@ -405,9 +550,68 @@ class Scheduler:
                 packed = table[unique_idx]   # single fused fetch
             for s, inv in zip(group, inverses):
                 self._results[s.ticket.tid] = packed[inv]
-            gain, per, fused = reorder.cross_stream_gain(streams)
-            stats[tid_key] = (gain, per, fused)
-        return stats, shard_stats
+            stream_refs[tid_key] = tuple(streams)
+        return stream_refs, shard_stats
+
+    def _execute_rmws(self, subs: List[_RmwSubmission],
+                      shard_stats: Dict) -> Dict:
+        """Fuse pending RMWs per (table, op): ONE combined update each.
+
+        Streams against the same table object with the same op are
+        concatenated and run through a single ``bulk_rmw`` — duplicate
+        destinations across tenants segment-combine before the unique
+        scatter touches the table (legal because RMW_OPS are associative +
+        commutative, §3.1). Different ops on one table chain in first-
+        appearance order; every ticket resolves to the table's end-of-
+        window state. On a mesh-backed engine the fused update runs
+        owner-locally per shard (``sharded_rmw``, duck-typed) and its
+        exchange record lands in ``shard_stats`` under
+        ``("rmw", table_id, op)``.
+        """
+        from repro.core import bulk_ops
+        groups: "OrderedDict[tuple, List[_RmwSubmission]]" = OrderedDict()
+        for s in subs:
+            groups.setdefault((s.table_id, s.op), []).append(s)
+        tables: Dict[int, jax.Array] = {}
+        members: Dict[int, List[_RmwSubmission]] = {}
+        stream_refs = {}
+        sharded = getattr(self.engine, "sharded_rmw", None)
+        num_shards = int(getattr(self.engine, "num_shards", 1))
+        for (tid_key, op), group in groups.items():
+            table = tables.get(tid_key, group[0].table)
+            members.setdefault(tid_key, []).extend(group)
+            idx = jnp.concatenate([s.idx for s in group]) if len(group) > 1 \
+                else group[0].idx
+            vals = [jnp.asarray(s.values).reshape(
+                        (s.idx.shape[0],) + table.shape[1:]).astype(
+                        table.dtype) for s in group]
+            values = jnp.concatenate(vals) if len(vals) > 1 else vals[0]
+            cond = None
+            if any(s.cond is not None for s in group):
+                cond = jnp.concatenate(
+                    [s.cond if s.cond is not None
+                     else jnp.ones((s.idx.shape[0],), bool) for s in group])
+            if sharded is not None and table.shape[0] >= num_shards:
+                if cond is not None:
+                    # sharded_rmw carries no mask: neutralise masked lanes
+                    # with the op identity (a no-op on the table)
+                    ident = isa.rmw_identity(op, table.dtype)
+                    cshape = (-1,) + (1,) * (values.ndim - 1)
+                    values = jnp.where(cond.reshape(cshape), values, ident)
+                new = sharded(table, idx, values, op=op)
+                if self.engine.last_shard_stats is not None:
+                    shard_stats[("rmw", tid_key, op)] = \
+                        self.engine.last_shard_stats
+            else:
+                new = bulk_ops.bulk_rmw(table, idx, values, op=op,
+                                        cond=cond,
+                                        optimize=self.engine.optimize)
+            tables[tid_key] = new
+            stream_refs[(tid_key, op)] = tuple(s.idx for s in group)
+        for tid_key, group in members.items():
+            for s in group:
+                self._results[s.ticket.tid] = tables[tid_key]
+        return stream_refs
 
     # (cross-program coalescing measurement lives in the module-level
     # helpers below so the lazy report thunk closes over extracted index

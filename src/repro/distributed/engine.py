@@ -29,7 +29,6 @@ fan out lane-wise across the mesh (``_constrain_batch``), and the
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict, Optional
 
 import jax
@@ -45,21 +44,41 @@ from repro.distributed import exchange
 from repro.distributed.mesh import as_mesh
 
 
-@dataclasses.dataclass(frozen=True)
 class ShardStats:
     """Per-stream record of one sharded bulk access.
 
     ``sent[i, j]`` counts valid lanes shard ``i`` routed to owner ``j``;
     ``received[j]`` / ``unique[j]`` are each owner's incoming lane count
     and distinct-row count — the per-shard coalescing statistic the
-    ``FlushReport`` rolls up. Fields hold device arrays so recording one
-    never blocks the flush hot path (same discipline as the lazy
-    ``GroupReport`` coalescing thunk); reading a field or property
-    materializes it.
+    ``FlushReport`` rolls up. Recording holds device arrays so it never
+    blocks the flush hot path (same discipline as the lazy ``GroupReport``
+    coalescing thunk); the first read of any field materializes all of
+    them to NumPy *and releases the device references*, so a long-lived
+    report (``AccessService.last_report``) cannot pin exchange buffers.
     """
-    sent: jax.Array
-    received: jax.Array
-    unique: jax.Array
+
+    def __init__(self, sent: jax.Array, received: jax.Array,
+                 unique: jax.Array):
+        self._device: Optional[tuple] = (sent, received, unique)
+        self._host: Optional[tuple] = None
+
+    def _materialize(self) -> tuple:
+        if self._host is None:
+            dev, self._device = self._device, None
+            self._host = tuple(np.asarray(x) for x in dev)
+        return self._host
+
+    @property
+    def sent(self) -> np.ndarray:
+        return self._materialize()[0]
+
+    @property
+    def received(self) -> np.ndarray:
+        return self._materialize()[1]
+
+    @property
+    def unique(self) -> np.ndarray:
+        return self._materialize()[2]
 
     @property
     def num_shards(self) -> int:
@@ -68,15 +87,21 @@ class ShardStats:
     @property
     def coalescing_gain(self) -> np.ndarray:
         """Owner-local dedup factor per shard (#landed / #distinct)."""
-        r, u = np.asarray(self.received), np.asarray(self.unique)
+        r, u = self.received, self.unique
         return r / np.maximum(u, 1)
 
     @property
     def local_fraction(self) -> float:
         """Fraction of requests already resident on their source shard
         (the diagonal of the exchange matrix — no fabric traffic)."""
-        s = np.asarray(self.sent)
+        s = self.sent
         return float(np.trace(s) / max(s.sum(), 1))
+
+    def __repr__(self) -> str:
+        # deliberately does not materialize (repr of a live report must not
+        # force a device sync)
+        state = "host" if self._host is not None else "device"
+        return f"ShardStats(<{state}>)"
 
 
 class ShardedEngine(Engine):
@@ -129,7 +154,10 @@ class ShardedEngine(Engine):
         shard_map trace — stable instead of slicing to a data-dependent
         length."""
         table = jnp.asarray(table)
-        idx = jnp.asarray(idx).astype(jnp.int32)
+        # loads clamp (policy): same as bulk_gather, so a mesh of any size
+        # agrees with the single-device engine on OOB streams
+        idx = jnp.clip(jnp.asarray(idx).astype(jnp.int32), 0,
+                       table.shape[0] - 1)
         n = int(idx.shape[0])
         if n == 0:
             self.last_shard_stats = None
@@ -158,7 +186,11 @@ class ShardedEngine(Engine):
         values = jnp.asarray(values).reshape(
             (n,) + table.shape[1:]).astype(table.dtype)
         rows_per = -(-int(table.shape[0]) // self.num_shards)
-        idx_p, valid, per = self._pad_stream(idx)
+        # stores drop (policy): negative/OOB destinations never enter the
+        # exchange (no fabric traffic, excluded from stats), matching the
+        # single-device bulk_rmw route-out
+        in_range = (idx >= 0) & (idx < table.shape[0])
+        idx_p, valid, per = self._pad_stream(idx, in_range)
         pad = per * self.num_shards - n
         if pad:
             values = jnp.concatenate(

@@ -11,8 +11,11 @@ def row_table_gather_ref(table: jax.Array, tile_block: jax.Array,
     """out[t*lanes + l] = table[tile_block[t]*block_rows + offsets[t, l]].
 
     Matches the kernel bit-exactly including padded lanes (which read offset
-    0 of the tile's block)."""
+    0 of the tile's block). Loads clamp (the repo-wide OOB policy): a row
+    outside the table — a plan built from an unclamped stream — reads the
+    nearest valid row instead of wrapping."""
     num_tiles = tile_block.shape[0]
     rows = tile_block[:, None] * block_rows + offsets      # (num_tiles, lanes)
+    rows = jnp.clip(rows, 0, table.shape[0] - 1)
     return table[rows.reshape(-1)].reshape(
         (num_tiles * lanes,) + table.shape[1:])

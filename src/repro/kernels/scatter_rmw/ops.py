@@ -19,14 +19,18 @@ def row_table_rmw(table: jax.Array, dest: jax.Array, vals: jax.Array, *,
                   interpret: bool = True, use_ref: bool = False) -> jax.Array:
     """table[dest[u]] op= vals[u] for unique, *sorted* dest.
 
-    Entries with dest >= table.shape[0] (padding/empty-segment markers) are
-    neutralised with the RMW identity. Returns the updated table.
+    Stores drop (the repo-wide OOB policy): entries with dest outside
+    ``[0, n)`` — scatter padding, empty-segment markers, negative or
+    overshooting destinations — are neutralised with the RMW identity.
+    Returns the updated table.
     """
     n = table.shape[0]
     ident = rmw_identity(op, table.dtype)
-    ok = dest < n
+    ok = (dest >= 0) & (dest < n)
     vals = jnp.where(ok.reshape((-1,) + (1,) * (vals.ndim - 1)), vals, ident)
-    dest_c = jnp.where(ok, dest, n - 1)  # stays sorted: pads were > all valid
+    # neutralised lanes keep the stream sorted: negatives (stream head)
+    # clamp to row 0, pads/overshoots (stream tail) to the last row
+    dest_c = jnp.where(dest < 0, 0, jnp.where(dest < n, dest, n - 1))
 
     n_pad = -(-n // block_rows) * block_rows
     padded = jnp.pad(table, ((0, n_pad - n),) + ((0, 0),) * (table.ndim - 1))

@@ -12,16 +12,20 @@ def row_table_rmw_ref(table: jax.Array, tile_block: jax.Array,
                       vals: jax.Array, *, block_rows: int, lanes: int,
                       op: str = "ADD") -> jax.Array:
     """Sequential semantics of the kernel (duplicate offsets across tiles of
-    the same block accumulate, matching the in-VMEM RMW)."""
+    the same block accumulate, matching the in-VMEM RMW). Stores drop (the
+    repo-wide OOB policy): rows outside the table — negative or past the
+    end — are routed out and discarded instead of wrapping."""
     num_tiles = tile_block.shape[0]
     rows = (tile_block[:, None] * block_rows + offsets).reshape(-1)
+    rows = jnp.where((rows >= 0) & (rows < table.shape[0]), rows,
+                     table.shape[0])
     v = vals.reshape((num_tiles * lanes,) + table.shape[1:])
     if op == "ADD":
-        return table.at[rows].add(v)
+        return table.at[rows].add(v, mode="drop")
     if op == "MAX":
-        return table.at[rows].max(v)
+        return table.at[rows].max(v, mode="drop")
     if op == "MIN":
-        return table.at[rows].min(v)
+        return table.at[rows].min(v, mode="drop")
     if op == "MUL":
-        return table.at[rows].multiply(v)
+        return table.at[rows].multiply(v, mode="drop")
     raise ValueError(op)

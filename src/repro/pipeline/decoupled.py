@@ -1,0 +1,200 @@
+"""Decoupled access/execute pipeline: double-buffered flush windows.
+
+DX100's deployment (paper Fig. 2) decouples *access* (the accelerator
+streams indexed data into scratchpads) from *execute* (cores compute on
+tiles already resident): while the cores chew on iteration k, the
+accelerator is already fetching iteration k+1's working set. Our
+``Scheduler`` batches and coalesces across tenants, but every blocking
+``flush()`` is a barrier — compute waits for access and access waits for
+compute, and the overlap the paper's design exists for never happens.
+
+``DecoupledLoop`` is that overlap, built on two mechanisms:
+
+  * ``Scheduler.flush_async`` dispatches a flush *window* without blocking
+    (JAX async dispatch keeps the XLA computations in flight behind the
+    returned ``FlushHandle``);
+  * redeeming a ticket hands back *futures* — arrays that can be fed
+    straight into the next dispatched computation without ever landing on
+    the host.
+
+Two drivers cover the two dependence shapes of Table-1 workloads:
+
+  * ``run``: iteration k+1's access window depends on iteration k's
+    compute output (SpMV power iteration gathers the new vector; BFS
+    expands the new frontier). The loop redeems window k without
+    blocking, dispatches compute k, and immediately dispatches window
+    k+1's access — so the device executes access k+1 while compute k is
+    still in flight, and the host never waits inside the loop.
+  * ``run_windows``: windows are mutually independent (hash-join probe
+    tiles, embedding lookups): up to ``depth`` access windows are kept in
+    flight ahead of the compute consuming them — classic double buffering
+    at ``depth=2``.
+
+``run_sequential`` is the strictly-coupled baseline (a hard
+``block_until_ready`` barrier after every phase) the pipeline benchmark
+gate measures against.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Callable, List, Optional, Sequence
+
+import jax
+
+from repro.core.scheduler import FlushHandle, Scheduler
+
+
+class AccessWindow:
+    """One iteration's access phase: the tickets submitted for it plus the
+    ``FlushHandle`` of the flush window that dispatched them.
+
+    ``redeem()`` hands back the retired results (futures — it never
+    blocks); ``ready`` polls retirement without blocking; ``wait()`` is
+    the explicit barrier (the sequential baseline's phase boundary).
+    """
+
+    def __init__(self, scheduler: Scheduler, tickets, handle: FlushHandle):
+        self.scheduler = scheduler
+        self.tickets = tickets
+        self.handle = handle
+
+    def redeem(self):
+        """Results for this window's tickets, in submission structure.
+        Non-blocking: arrays may still be in flight."""
+        return jax.tree_util.tree_map(
+            lambda t: self.scheduler.result(t), self.tickets,
+            is_leaf=lambda x: hasattr(x, "tid"))
+
+    @property
+    def ready(self) -> bool:
+        return self.handle.poll()
+
+    def wait(self):
+        self.handle.result()
+        return self
+
+
+class DecoupledLoop:
+    """Double-buffered access/execute driver over one scheduler/service.
+
+    ``target``: a ``Scheduler`` or anything scheduler-shaped exposing
+    ``submit_gather``/``submit_rmw``/``submit``/``flush_async``/``result``
+    (``serve.AccessService`` qualifies — it forwards to its scheduler).
+
+    The access callback receives this loop and submits through it (so app
+    code is agnostic to scheduler vs service); the loop flushes one window
+    per access phase.
+    """
+
+    def __init__(self, target, *, depth: int = 2):
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
+        self.target = target
+        self.depth = int(depth)
+        self.stats = {"windows": 0, "iterations": 0}
+
+    # -- submission forwarding (app code talks to the loop) -----------------
+
+    def submit_gather(self, table, idx, **kw):
+        return self.target.submit_gather(table, idx, **kw)
+
+    def submit_rmw(self, table, idx, values, **kw):
+        return self.target.submit_rmw(table, idx, values, **kw)
+
+    def submit(self, program, env, regs=None, **kw):
+        return self.target.submit(program, env, regs, **kw)
+
+    def _scheduler(self) -> Scheduler:
+        return getattr(self.target, "scheduler", self.target)
+
+    def _dispatch_window(self, access: Callable, k: int,
+                         state) -> Optional[AccessWindow]:
+        tickets = access(self, k, state)
+        handle = self.target.flush_async()
+        self.stats["windows"] += 1
+        if tickets is None:
+            return None
+        return AccessWindow(self._scheduler(), tickets, handle)
+
+    # -- dependent iterations (access k+1 consumes compute k's output) ------
+
+    def run(self, state, n_iters: int, access: Callable, compute: Callable):
+        """Drive ``n_iters`` dependent iterations with one-window lookahead.
+
+        ``access(loop, k, state) -> tickets``: submit iteration ``k``'s
+        bulk accesses through ``loop`` (any pytree of tickets, or None).
+        ``compute(k, state, results) -> state``: consume the redeemed
+        results (futures!) and produce the next state.
+
+        Iteration k's results are redeemed *without blocking* and compute
+        k is dispatched; access k+1 is submitted immediately after — while
+        compute k (and possibly access k itself) is still executing on
+        device. The host blocks only when the caller finally materializes
+        the returned state.
+        """
+        if n_iters <= 0:
+            return state
+        window = self._dispatch_window(access, 0, state)
+        for k in range(n_iters):
+            results = window.redeem() if window is not None else None
+            state = compute(k, state, results)
+            self.stats["iterations"] += 1
+            if k + 1 < n_iters:
+                window = self._dispatch_window(access, k + 1, state)
+        return state
+
+    # -- independent windows (hash-join probe tiles, lookup batches) --------
+
+    def run_windows(self, items: Sequence, access: Callable,
+                    compute: Callable) -> List:
+        """Pipeline independent work items with ``depth`` windows in flight.
+
+        ``access(loop, k, item) -> tickets`` submits item ``k``'s accesses;
+        ``compute(k, item, results)`` consumes the redeemed results and
+        returns the item's output. Access windows run up to ``depth``
+        items ahead of the compute that consumes them (double buffering at
+        the default ``depth=2``): while compute k is in flight the
+        accelerator is already serving windows k+1..k+depth.
+        """
+        items = list(items)
+        out: List = []
+        inflight: deque = deque()
+        for k in range(min(self.depth, len(items))):
+            inflight.append((k, self._dispatch_window(access, k, items[k])))
+        next_k = len(inflight)
+        while inflight:
+            k, window = inflight.popleft()
+            results = window.redeem() if window is not None else None
+            out.append(compute(k, items[k], results))
+            self.stats["iterations"] += 1
+            if next_k < len(items):
+                inflight.append(
+                    (next_k, self._dispatch_window(access, next_k,
+                                                   items[next_k])))
+                next_k += 1
+        return out
+
+
+def run_sequential(target, state, n_iters: int, access: Callable,
+                   compute: Callable):
+    """Strictly-coupled baseline: access, BARRIER, compute, BARRIER.
+
+    Same callbacks as ``DecoupledLoop.run``, but every phase ends in a
+    hard ``block_until_ready`` — compute never overlaps access, which is
+    exactly the pre-accelerator behaviour the paper's Fig. 2 contrasts
+    against (and what ``benchmarks/pipeline_bench.py`` gates the pipeline
+    speedup on).
+    """
+    loop = DecoupledLoop(target, depth=1)
+    for k in range(n_iters):
+        tickets = access(loop, k, state)
+        handle = target.flush_async()
+        handle.result()                      # access barrier
+        results = None
+        if tickets is not None:
+            window = AccessWindow(loop._scheduler(), tickets, handle)
+            results = window.redeem()
+            jax.block_until_ready(results)
+        state = compute(k, state, results)
+        state = jax.block_until_ready(state)  # compute barrier
+    return state

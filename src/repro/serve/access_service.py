@@ -23,7 +23,8 @@ import dataclasses
 from typing import Mapping, Optional
 
 from repro.core.engine import Engine
-from repro.core.scheduler import FlushReport, Scheduler, Ticket
+from repro.core.scheduler import (FlushHandle, FlushReport, Scheduler,
+                                  Ticket)
 
 
 class AccessService:
@@ -76,25 +77,46 @@ class AccessService:
         self._maybe_flush()
         return t
 
+    def submit_rmw(self, table, idx, values, *, op: str = "ADD",
+                   cond=None, tenant: str = "core0") -> Ticket:
+        """Bulk RMW fast path (see ``Scheduler.submit_rmw``): the ticket
+        resolves to the table's end-of-window state."""
+        t = self.scheduler.submit_rmw(table, idx, values, op=op, cond=cond,
+                                      tenant=tenant)
+        self._maybe_flush()
+        return t
+
     def poll(self, ticket: Ticket):
         """Non-blocking: result if retired, else None."""
         return self.scheduler.poll(ticket)
 
     def wait(self, ticket: Ticket):
         """Retrieve a result, flushing the shared queue if still pending.
-        The flush goes through ``self.flush`` so ``last_report`` always
-        describes the flush that retired this ticket."""
+        The flush goes through ``self.flush_async`` so ``last_report``
+        always describes the window that retired this ticket; the result
+        comes back as soon as it is *dispatched* (JAX futures — callers
+        that need a barrier block on the arrays themselves)."""
         if self.scheduler.poll(ticket) is None and self.scheduler.pending:
-            self.flush()
+            self.flush_async()
         return self.scheduler.result(ticket)
 
     def flush(self) -> FlushReport:
         self.last_report = self.scheduler.flush()
         return self.last_report
 
+    def flush_async(self) -> "FlushHandle":
+        """Non-blocking flush (see ``Scheduler.flush_async``): dispatches
+        the window and returns its ``FlushHandle``; ``last_report`` is set
+        immediately (the report describes the dispatched window)."""
+        handle = self.scheduler.flush_async()
+        self.last_report = handle.report
+        return handle
+
     def _maybe_flush(self):
+        # auto-flush dispatches without blocking: the whole point of the
+        # threshold is to keep the device fed, not to stall the submitter
         if self.auto_flush and self.scheduler.pending >= self.auto_flush:
-            self.flush()
+            self.flush_async()
 
     @property
     def pending(self) -> int:
@@ -118,6 +140,10 @@ class CoreClient:
 
     def submit_gather(self, table, idx) -> Ticket:
         return self.service.submit_gather(table, idx, tenant=self.tenant)
+
+    def submit_rmw(self, table, idx, values, *, op="ADD", cond=None) -> Ticket:
+        return self.service.submit_rmw(table, idx, values, op=op, cond=cond,
+                                       tenant=self.tenant)
 
     def poll(self, ticket: Ticket):
         return self.service.poll(ticket)

@@ -15,7 +15,8 @@ from repro.testing.conformance import build as build_conformance
 from repro.testing.fuzzer import FuzzCase, generate_case
 from repro.testing.harness import (CONFIG_MATRIX, EAGER_CONFIGS,
                                    JIT_CONFIGS, EngineConfig, ParityError,
-                                   check_case_parity, check_pattern_parity,
+                                   check_app_parity, check_case_parity,
+                                   check_pattern_parity,
                                    check_scheduler_parity,
                                    check_sharded_parity,
                                    default_sharded_cases,
@@ -26,7 +27,8 @@ from repro.testing.oracle import (NP_DTYPES, OracleEngine, eval_expr,
 __all__ = [
     "conformance_names", "build_conformance", "FuzzCase", "generate_case",
     "CONFIG_MATRIX", "EAGER_CONFIGS", "JIT_CONFIGS", "EngineConfig",
-    "ParityError", "check_case_parity", "check_pattern_parity",
+    "ParityError", "check_app_parity", "check_case_parity",
+    "check_pattern_parity",
     "check_scheduler_parity", "check_sharded_parity",
     "default_sharded_cases",
     "rotating_configs", "run_engine_tiled", "NP_DTYPES", "OracleEngine",

@@ -66,11 +66,26 @@ class _Gen:
         return int(self.rng.choice(REGION_SIZES))
 
     def new_index_region(self, bound: int, size: int | None = None) -> str:
-        """Fresh int32 region with values uniform in [0, bound)."""
+        """Fresh int32 region with values uniform in [0, bound).
+
+        ~1 in 8 regions is *poisoned* with out-of-range entries — negatives
+        and values past ``bound`` — so the unified OOB policy (loads clamp,
+        stores drop; DESIGN.md) is fuzzed across the whole config matrix,
+        not just unit-tested. Legal by construction either way: the policy
+        gives every OOB access defined semantics that the oracle mirrors.
+        """
         size = int(size if size is not None else self._size())
         name = self._name("ix")
-        self.env[name] = self.rng.integers(
+        vals = self.rng.integers(
             0, max(bound, 1), size=size).astype(np.int32)
+        if self.rng.random() < 0.125:
+            k = max(1, size // 8)
+            pos = self.rng.choice(size, size=k, replace=False)
+            neg = -self.rng.integers(1, bound + 2, size=k)
+            big = bound + self.rng.integers(0, bound + 2, size=k)
+            vals[pos] = np.where(self.rng.random(k) < 0.5,
+                                 neg, big).astype(np.int32)
+        self.env[name] = vals
         return name
 
     def new_value_region(self, dtype: str, size: int | None = None) -> str:

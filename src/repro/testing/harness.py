@@ -230,11 +230,15 @@ def check_scheduler_parity(cases: Sequence, *, tile_size: int = 1024,
 def _np_rmw(table: np.ndarray, idx: np.ndarray, vals: np.ndarray,
             op: str) -> np.ndarray:
     """Sequential per-lane RMW ground truth (mirrors ``OracleEngine``'s
-    IRMW loop): naive program order, no sorting, no segment combines."""
+    IRMW loop): naive program order, no sorting, no segment combines.
+    Stores drop (the unified OOB policy): out-of-range destinations are
+    skipped."""
     out = np.array(table)
     vals = vals.reshape((idx.shape[0],) + out.shape[1:]).astype(out.dtype)
     for k in range(idx.shape[0]):
         a = int(idx[k])
+        if not 0 <= a < out.shape[0]:
+            continue
         out[a:a + 1] = oracle.np_alu(op, out[a:a + 1], vals[k:k + 1])
     return out
 
@@ -246,7 +250,9 @@ def default_sharded_cases(seed: int = 0, *, n_rows: int = 257,
     Index distributions span the paper's microbenchmark regimes (uniform,
     zipf-skewed, blocked) plus the sharding-specific hazards: rows sitting
     exactly on the owner boundaries of every mesh size in {2, 4, 8}, an
-    all-duplicates stream, and an empty stream. RMW cases cover every
+    all-duplicates stream, an empty stream, and an OOB stream (negatives
+    + overshoots — the unified policy clamps them for gathers and drops
+    them for RMWs, identically at every mesh size). RMW cases cover every
     ``RMW_OPS`` combine on an integer table (order-independent mod 2^32,
     hence bit-exact however shards merge) plus a float ADD checked to
     tolerance (§3.1: float reductions are legally reordered).
@@ -266,13 +272,21 @@ def default_sharded_cases(seed: int = 0, *, n_rows: int = 257,
             return rng.choice(edges, size=n).astype(np.int32)
         if kind == "dup":
             return np.full(n, int(rng.integers(0, n_rows)), np.int32)
+        if kind == "oob":
+            s = streams.make_indices(rng, n_rows, n, "uniform")
+            pos = rng.choice(n, size=n // 4, replace=False)
+            neg = -rng.integers(1, n_rows, size=pos.shape[0])
+            big = n_rows + rng.integers(0, n_rows, size=pos.shape[0])
+            s[pos] = np.where(rng.random(pos.shape[0]) < 0.5,
+                              neg, big).astype(np.int32)
+            return s
         raise ValueError(kind)
 
     t1 = rng.normal(size=(n_rows,)).astype(np.float32)
     t2 = rng.normal(size=(n_rows, 6)).astype(np.float32)
     ti = rng.integers(0, 2 ** 15, size=(n_rows,)).astype(np.int32)
     cases = []
-    for kind in ("uniform", "zipf", "blocked", "boundary", "dup"):
+    for kind in ("uniform", "zipf", "blocked", "boundary", "dup", "oob"):
         cases.append(("gather", t1, stream(kind)))
     cases.append(("gather", t2, stream("uniform")))
     cases.append(("gather", t1, np.zeros((0,), np.int32)))
@@ -281,6 +295,9 @@ def default_sharded_cases(seed: int = 0, *, n_rows: int = 257,
         cases.append(("rmw", ti, stream("zipf"), vals, op))
     cases.append(("rmw", t1, stream("zipf"),
                   rng.normal(size=n_idx).astype(np.float32), "ADD"))
+    cases.append(("rmw", ti, stream("oob"),
+                  rng.integers(0, 2 ** 10, size=n_idx).astype(np.int32),
+                  "ADD"))
     return cases
 
 
@@ -323,7 +340,9 @@ def check_sharded_parity(cases: Sequence | None = None, *,
             if case[0] == "gather":
                 _, table, idx = case
                 got = eng.sharded_gather(table, idx)
-                want = np.asarray(table)[np.asarray(idx)]
+                tn = np.asarray(table)
+                # loads clamp (the unified OOB policy)
+                want = tn[np.clip(np.asarray(idx), 0, tn.shape[0] - 1)]
                 _assert_match(f"[mesh={m} case{k} gather] vs NumPy oracle",
                               got, want, rtol=0, atol=0)
             elif case[0] == "rmw":
@@ -336,6 +355,56 @@ def check_sharded_parity(cases: Sequence | None = None, *,
             else:
                 raise ValueError(f"unknown case kind {case[0]!r}")
             checked += 1
+    return checked, ran
+
+
+def check_app_parity(app_names: Sequence[str] | None = None, *,
+                     modes: Sequence[str] = ("eager", "pipelined"),
+                     mesh_sizes: Sequence[int] = (),
+                     seeds: Sequence[int] = (0,),
+                     require_all: bool = False):
+    """End-to-end app parity: every ``repro.apps`` driver vs its
+    sequential NumPy oracle, **bit-exact** (zero tolerance, f32 included —
+    the apps are constructed so every float reduction is exact and
+    order-independent; see ``apps.spmv``).
+
+    ``modes`` runs each app's single-device drivers; ``mesh_sizes``
+    additionally runs the pipelined driver over a ``ShardedEngine`` mesh
+    of each size (skipped when the host has fewer devices, unless
+    ``require_all`` — the CI ``sharded`` job forces 8 host devices).
+    Returns ``(checked, ran_mesh_sizes)``.
+    """
+    import jax
+
+    from repro.apps import APPS
+    names = list(app_names) if app_names else list(APPS)
+    n_dev = len(jax.devices())
+    checked, ran = 0, []
+    for ms in mesh_sizes:
+        if ms > n_dev and require_all:
+            raise ValueError(
+                f"mesh size {ms} needs {ms} devices, have {n_dev}; set "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count={ms}")
+    for name in names:
+        mod = APPS[name]
+        for seed in seeds:
+            want = mod.demo_reference(seed)
+            for mode in modes:
+                got = mod.demo(seed, mode=mode)
+                _assert_match(
+                    f"[app={name} seed={seed} {mode}] vs NumPy oracle",
+                    got, want, rtol=0, atol=0)
+                checked += 1
+            for ms in mesh_sizes:
+                if ms > n_dev:
+                    continue
+                if ms not in ran:
+                    ran.append(ms)
+                got = mod.demo(seed, mode="pipelined", mesh=ms)
+                _assert_match(
+                    f"[app={name} seed={seed} pipelined mesh={ms}] "
+                    "vs NumPy oracle", got, want, rtol=0, atol=0)
+                checked += 1
     return checked, ran
 
 
