@@ -94,6 +94,30 @@ def run():
     emit("scheduler_compile_cache", t_bat,
          f"traces={stats['trace_misses']} requests={stats['trace_requests']}")
 
+    # plan-IR lowering overhead: submit + lower the 16-program window
+    # (explain() — the exact lowering flush executes) WITHOUT emitting,
+    # vs the full batched flush above. Gated machine-independently via
+    # gate_ratio = flush/lower: compare.py fails if lowering grows to a
+    # larger fraction of the flush (the <5%-of-flush budget).
+    sched_l = Scheduler(engine=Engine(tile_size=TILE), max_batch=N_PROGS)
+
+    def lower_only():
+        for i, env in enumerate(envs):
+            sched_l.submit(prog, env, regs, tenant=f"core{i}")
+        sched_l.explain()
+        sched_l._queue.clear()        # discard the window: lowering only
+        sched_l._lowered = None
+
+    t_lower = time_fn(lower_only, iters=20, warmup=2, agg=min)
+    emit("scheduler_plan_overhead", t_lower,
+         f"submit+lower {N_PROGS} programs; gate_ratio={t_bat / t_lower:.2f}"
+         f" ({100 * t_lower / t_bat:.1f}% of a flush)")
+
+    # plan-cache effectiveness across the repeated windows timed above
+    ph, pm = sched.stats["plan_cache_hits"], sched.stats["plan_cache_misses"]
+    emit("scheduler_plan_cache", 0.0,
+         f"hits={ph} misses={pm} hit_rate={ph / max(ph + pm, 1):.2f}")
+
     # cross-request coalescing gains across index mixes on a shared table
     for loc in ("uniform", "zipf", "blocked"):
         streams = [make_indices(rng, ROWS // 8, TILE, loc)

@@ -126,7 +126,10 @@ def run(g: Graph, src: int, *, levels: int, mode: str = "pipelined",
         t = sched.submit_rmw(dist, nbrs,
                              jnp.full((cap,), k + 1, jnp.int32),
                              op="MIN", cond=valid)
-        sched.flush_async()       # second window of the level: the RMW
+        # second window of the level: the RMW. inflight_ok — this window
+        # deliberately overlaps the loop's already-dispatched access
+        # window (the in-flight guard exists for accidental overlap)
+        sched.flush_async(inflight_ok=True)
         dist = sched.result(t)    # future — never synced on host
         return dist, dist == (k + 1)
 

@@ -18,8 +18,8 @@ from repro.core.range_fuser import fuse_ranges
 from repro.core.reorder import (RowTablePlan, coalesce, coalesce_streams,
                                 coalescing_factor, cross_stream_gain,
                                 make_row_table_plan, sort_indices)
-from repro.core.scheduler import (FlushHandle, FlushReport, Scheduler,
-                                  Ticket)
+from repro.core.scheduler import (FailedResult, FlushHandle, FlushReport,
+                                  Scheduler, Ticket)
 
 __all__ = [
     "isa", "reorder", "Engine", "bulk_gather", "bulk_scatter", "bulk_rmw",
@@ -27,6 +27,6 @@ __all__ = [
     "Compare", "RangeLoop", "Var", "LegalityError", "run_tiled",
     "RowTablePlan", "coalesce", "coalescing_factor", "make_row_table_plan",
     "sort_indices", "coalesce_streams", "cross_stream_gain",
-    "Scheduler", "Ticket", "FlushReport", "FlushHandle",
+    "Scheduler", "Ticket", "FlushReport", "FlushHandle", "FailedResult",
     "TracedExecutable", "structural_signature",
 ]

@@ -142,6 +142,12 @@ class TracedExecutable:
 
 
 class Engine:
+    # Name of the registered plan backend (``repro.plan.emit``) the
+    # scheduler lowers through for this engine. Mesh engines override it
+    # ("sharded") and register their pass/emitter table at import — the
+    # registry, not duck-typing, routes every flush window.
+    plan_backend = "local"
+
     def __init__(self, tile_size: int = 16384, *, optimize: bool = True,
                  use_kernel: bool = False):
         self.tile_size = int(tile_size)
@@ -166,8 +172,7 @@ class Engine:
         only in ``name`` share an entry; jax.jit's own shape cache guards
         differing env shapes.
         """
-        key = (structural_signature(program), self.tile_size, self.optimize,
-               self.use_kernel, batch, frozenset(shared))
+        key = self._cache_key(program, batch, shared)
         self.stats["trace_requests"] += 1
         exe = self._cache.get(key)
         if exe is None:
@@ -176,6 +181,21 @@ class Engine:
                                    shared=shared)
             self._cache[key] = exe
         return exe
+
+    def _cache_key(self, program: isa.AccessProgram,
+                   batch: Optional[int], shared) -> tuple:
+        # single source of truth: executable() and peek_cached() must
+        # never drift apart on what identifies a cached trace
+        return (structural_signature(program), self.tile_size,
+                self.optimize, self.use_kernel, batch, frozenset(shared))
+
+    def peek_cached(self, program: isa.AccessProgram, *,
+                    batch: Optional[int] = None,
+                    shared: frozenset = frozenset()) -> bool:
+        """True if the compile cache already holds this executable —
+        read-only (never instantiates): the cost model / ``explain()``
+        consult it for trace-state without perturbing the counters."""
+        return self._cache_key(program, batch, shared) in self._cache
 
     # -- batch placement hook ------------------------------------------------
     def _constrain_batch(self, stacked: Dict) -> Dict:

@@ -5,37 +5,41 @@ The paper's defining system property is that one DX100 serves *many* cores
 accelerator reorders, interleaves and coalesces accesses *across* the
 outstanding requests. This module is that shared frontend:
 
-  * ``Scheduler.submit`` enqueues an ``AccessProgram`` + env from a logical
-    core (``tenant``) and returns a ``Ticket``; ``poll``/``result`` read the
-    retired env/scratchpad back — the async MMIO submit/poll protocol.
-  * ``flush`` drains the queue in **round-robin tenant order** (fairness:
-    no core starves behind a bulk submitter), groups submissions by
-    **structural signature** (instruction stream + env/reg structure), and
-    executes each group as **one jitted ``jax.vmap`` computation** over
-    stacked tiles — N programs, one XLA dispatch, one trace ever (the
-    engine's compile cache persists across flushes).
-  * ``submit_gather`` is the bulk fast-path where cross-request coalescing
-    is applied *for real*: all pending gathers against the same table are
-    fused into a single ``reorder.coalesce_streams`` fetch, so rows
-    requested by several tenants are read **once** (§2.3 shared-row reuse).
-  * For program groups, the flush report *measures* the same opportunity:
-    statically extractable index streams hitting a shared region are scored
-    with ``reorder.cross_stream_gain`` (reported, not yet fused — results
-    always come from the bit-faithful engine path).
+  * ``Scheduler.submit`` / ``submit_gather`` / ``submit_rmw`` enqueue work
+    from a logical core (``tenant``) as **AccessPlan IR leaves**
+    (``repro.plan.nodes``) and return ``Ticket``s; ``poll``/``result``
+    read the retired results back — the async MMIO submit/poll protocol.
+  * ``flush_async`` drains the queues in round-robin tenant order and
+    **lowers the window through the plan pass pipeline**
+    (``normalize -> group -> fuse -> coalesce -> shard -> batch``,
+    ``repro.plan.passes``): structural-signature grouping, cross-request
+    gather/RMW fusion, coalescing and backend selection (eager vs bulk vs
+    sharded, ``repro.plan.cost``) are all pass decisions on the plan
+    tree — this module's ``_execute_*`` methods are only the registered
+    *emitters* that execute the already-annotated nodes.
+  * ``explain()`` returns the lowered plan for the pending window with
+    per-pass deltas; the same plan object is then executed by the next
+    flush and travels on ``FlushReport.plan`` (node ids round-trip).
+  * Lowering *decisions* are cached per structural window signature (the
+    plan cache): repeat windows — the decoupled pipeline's steady state —
+    replay the recorded skeleton instead of re-deciding.
 
 Everything degrades safely: a group whose program vmap cannot trace falls
-back to per-program cached executables, and a group of one skips stacking.
+back to per-program cached executables, and any plan node whose emission
+raises resolves its tickets to ``FailedResult`` without poisoning the
+rest of the window.
 
-When the backing engine spans a device mesh (``distributed.ShardedEngine``,
-duck-typed on ``sharded_gather`` so this module never imports the
-distributed package), fused gather fetches execute owner-locally per shard
-(§6.6 address-range partitioning) and batched program groups fan out
-lane-wise across the mesh; ``FlushReport.shard_stats`` carries the
-per-shard exchange/coalescing record.
+When the backing engine spans a device mesh (``distributed.ShardedEngine``),
+the engine's ``plan_backend`` names the registered "sharded" backend: its
+shard pass wraps mesh-eligible fused nodes in ``ShardedNode`` and its
+emitters run them owner-locally per shard (§6.6 address-range
+partitioning) — core never imports (or duck-type-probes) the distributed
+package; ``FlushReport.shard_stats`` carries the per-shard record.
 """
 from __future__ import annotations
 
 import dataclasses
+import weakref
 from collections import OrderedDict, deque
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
@@ -43,12 +47,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import isa, reorder
+from repro.core import bulk_ops, isa, reorder
 from repro.core.engine import Engine, structural_signature
+from repro.plan import cost as plan_cost
+from repro.plan import emit as plan_emit
+from repro.plan import nodes as plan_nodes
+from repro.plan import passes as plan_passes
+from repro.plan.explain import Explanation
+
+# lowering-decision cache entries kept per scheduler (LRU)
+PLAN_CACHE_SIZE = 256
 
 
 # ---------------------------------------------------------------------------
-# tickets and queue entries
+# tickets and results
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
@@ -59,43 +71,8 @@ class Ticket:
 
 
 @dataclasses.dataclass
-class _Submission:
-    ticket: Ticket
-    program: isa.AccessProgram
-    env: Dict
-    regs: Dict
-    group_key: tuple
-    src_ids: Dict      # region -> id() of the array the caller passed in
-    # strong refs to the caller's original objects: keeps the ids above
-    # valid for the submission's lifetime (CPython reuses a freed object's
-    # id, which would otherwise let two different tables alias one group)
-    src_refs: tuple
-
-
-@dataclasses.dataclass
-class _GatherSubmission:
-    ticket: Ticket
-    table: jax.Array
-    idx: jax.Array
-    table_id: int      # id() of the array the caller passed (fusion key)
-    table_ref: object  # strong ref keeping that id valid while queued
-
-
-@dataclasses.dataclass
-class _RmwSubmission:
-    ticket: Ticket
-    table: jax.Array
-    idx: jax.Array
-    values: jax.Array
-    op: str
-    cond: Optional[jax.Array]
-    table_id: int      # id() of the array the caller passed (fusion key)
-    table_ref: object  # strong ref keeping that id valid while queued
-
-
-@dataclasses.dataclass
 class FailedResult:
-    """Stored in place of a result when the owning group's execution
+    """Stored in place of a result when the owning plan node's execution
     raised; ``Scheduler.result`` re-raises ``error``."""
     error: Exception
 
@@ -142,6 +119,9 @@ class FlushReport:
     sync the device. As with ``GroupReport``, the thunk reference is
     dropped after first materialization so a long-lived report releases
     the closed-over streams.
+
+    ``plan`` is the executed (and stripped — array payloads released)
+    AccessPlan: render it via ``repro.plan.explain(report)``.
     """
     order: Tuple[Tuple[str, int], ...]    # (tenant, tid) execution order
     groups: Tuple[GroupReport, ...]
@@ -153,6 +133,8 @@ class FlushReport:
     shard_stats: Dict[object, object] = dataclasses.field(
         default_factory=dict)
     n_rmws: int = 0
+    plan: Optional[plan_nodes.Plan] = dataclasses.field(
+        default=None, repr=False)
     _gather_thunk: Optional[object] = dataclasses.field(
         default=None, repr=False)
     _gather_coalescing: Optional[Dict] = dataclasses.field(
@@ -180,30 +162,46 @@ class FlushReport:
 class FlushHandle:
     """Non-blocking handle for one dispatched flush window.
 
-    ``flush_async`` drains the queues and *dispatches* every group — JAX's
-    async dispatch means the XLA computations are in flight, not finished,
-    when it returns. ``poll()`` reports (without blocking) whether every
-    result retired by the window is resident; ``result()`` blocks until
-    they all are and returns the window's ``FlushReport``. Tickets stay
-    redeemable through ``Scheduler.poll``/``result`` exactly as for a
-    blocking flush — redeeming a ticket whose arrays are still in flight
-    simply hands back futures.
+    ``flush_async`` drains the queues and *dispatches* every plan node —
+    JAX's async dispatch means the XLA computations are in flight, not
+    finished, when it returns. ``poll()`` reports (without blocking)
+    whether every result retired by the window is resident; ``result()``
+    blocks until they all are and returns the window's ``FlushReport``.
+    ``result()`` is idempotent: once the window has retired, repeat calls
+    hand back the materialized report without ever re-syncing. Tickets
+    stay redeemable through ``Scheduler.poll``/``result`` exactly as for
+    a blocking flush — redeeming a ticket whose arrays are still in
+    flight simply hands back futures.
     """
 
     def __init__(self, report: FlushReport, leaves: tuple):
         self.report = report
         self._leaves = leaves
+        self._done = not leaves
 
     def poll(self) -> bool:
         """True once every array retired by this window is resident."""
-        return all(leaf.is_ready() for leaf in self._leaves
-                   if hasattr(leaf, "is_ready"))
+        if self._done:
+            return True
+        if all(leaf.is_ready() for leaf in self._leaves
+               if hasattr(leaf, "is_ready")):
+            self._leaves = ()
+            self._done = True
+            return True
+        return False
+
+    @property
+    def done(self) -> bool:
+        """Retired (or explicitly resolved) — the in-flight guard's test."""
+        return self._done or self.poll()
 
     def result(self) -> FlushReport:
-        """Block until the window has fully retired; returns its report."""
-        if self._leaves:
+        """Block until the window has fully retired; returns its report.
+        Idempotent — a second call never blocks or re-syncs."""
+        if not self._done:
             jax.block_until_ready(list(self._leaves))
             self._leaves = ()
+            self._done = True
         return self.report
 
 
@@ -212,8 +210,10 @@ class FlushHandle:
 # ---------------------------------------------------------------------------
 
 def _leaf_struct(x) -> tuple:
+    # memoized dtype_str: submit pays it per env leaf, and un-memoized
+    # str(np.dtype) was ~40% of the submit+lower path (plan_overhead)
     x = jnp.asarray(x) if not hasattr(x, "shape") else x
-    return tuple(x.shape), str(x.dtype)
+    return tuple(x.shape), plan_passes.dtype_str(x.dtype)
 
 
 def _env_struct(env: Mapping) -> tuple:
@@ -227,23 +227,39 @@ class Scheduler:
       engine     : the backing engine; defaults to a fresh one. Long-lived —
                    its compile cache is what kills per-call re-tracing.
       max_batch  : cap on programs fused into one vmap group per flush.
+      cost_model : ``repro.plan.CostModel`` override (forced backends,
+                   measurement budget); defaults to the standard model.
     """
 
     def __init__(self, engine: Optional[Engine] = None, *,
                  tile_size: int = 16384, optimize: bool = True,
-                 use_kernel: bool = False, max_batch: int = 32):
+                 use_kernel: bool = False, max_batch: int = 32,
+                 cost_model: Optional[plan_cost.CostModel] = None):
         self.engine = engine if engine is not None else Engine(
             tile_size=tile_size, optimize=optimize, use_kernel=use_kernel)
         self.max_batch = int(max_batch)
-        self._queue: List[_Submission] = []
-        self._gather_queue: List[_GatherSubmission] = []
-        self._rmw_queue: List[_RmwSubmission] = []
+        self.cost = cost_model if cost_model is not None \
+            else plan_cost.CostModel()
+        self._queue: List[plan_nodes.ProgramNode] = []
+        self._gather_queue: List[plan_nodes.GatherNode] = []
+        self._rmw_queue: List[plan_nodes.RmwNode] = []
         self._results: Dict[int, tuple] = {}
         self._next_tid = 0
         self._rr_cursor = 0          # rotates the round-robin start tenant
+        # weakref: the guard must observe the last window's done-ness, but
+        # must not pin an abandoned handle's report/leaves for the
+        # scheduler's lifetime (the report-lifetime rule — a dropped
+        # handle releases its window; a gc'd handle lifts the guard)
+        self._inflight: Optional[weakref.ref] = None
+        # queue-fingerprint -> lowered Plan (explain()/flush share one
+        # lowering); plan cache: window signature -> decision Skeleton
+        self._lowered: Optional[tuple] = None
+        self._plan_cache: "OrderedDict[tuple, plan_passes.Skeleton]" = \
+            OrderedDict()
         self.stats = {"flushes": 0, "programs": 0, "gathers": 0,
                       "rmws": 0, "vmap_groups": 0, "vmap_fallbacks": 0,
-                      "singleton_groups": 0, "group_errors": 0}
+                      "singleton_groups": 0, "group_errors": 0,
+                      "plan_cache_hits": 0, "plan_cache_misses": 0}
 
     # -- submission ----------------------------------------------------------
 
@@ -275,23 +291,31 @@ class Scheduler:
         regs = dict(regs or {})
         key = (structural_signature(program), _env_struct(env),
                tuple(sorted(regs)))
-        sub = _Submission(self._ticket(tenant), program, env, regs, key,
-                          src_ids, src_refs)
-        self._queue.append(sub)
-        return sub.ticket
+        leaf = plan_nodes.ProgramNode(
+            nid=-1, ticket=self._ticket(tenant), program=program, env=env,
+            regs=regs, group_key=key, src_ids=src_ids, src_refs=src_refs)
+        self._queue.append(leaf)
+        return leaf.ticket
 
     def submit_gather(self, table, idx, *, tenant: str = "core0") -> Ticket:
         """Bulk fast-path: C = table[idx] with *cross-request* coalescing.
 
         All pending gathers against the same table object are fused into a
-        single coalesced fetch at flush time; the result for this ticket is
-        the (N,)- or (N, D)-shaped gathered array.
+        single plan node at flush time (whose backend — direct, coalesced
+        or mesh-sharded — the cost model picks); the result for this
+        ticket is the (N,)- or (N, D)-shaped gathered array.
         """
-        sub = _GatherSubmission(self._ticket(tenant), jnp.asarray(table),
-                                jnp.asarray(idx).astype(jnp.int32),
-                                table_id=id(table), table_ref=table)
-        self._gather_queue.append(sub)
-        return sub.ticket
+        jtable = jnp.asarray(table)
+        # flatten up front: the coalesced fetch always worked on the flat
+        # stream (coalesce_streams reshapes), so the eager backend must
+        # see the same shape — one canonical form for every path
+        jidx = jnp.asarray(idx).astype(jnp.int32).reshape(-1)
+        leaf = plan_nodes.GatherNode(
+            nid=-1, ticket=self._ticket(tenant), table=jtable, idx=jidx,
+            table_id=id(table), table_ref=table,
+            n_lanes=int(jidx.shape[0]), table_rows=int(jtable.shape[0]))
+        self._gather_queue.append(leaf)
+        return leaf.ticket
 
     def submit_rmw(self, table, idx, values, *, op: str = "ADD",
                    cond=None, tenant: str = "core0") -> Ticket:
@@ -311,30 +335,32 @@ class Scheduler:
         """
         if op not in isa.RMW_OPS:
             raise ValueError(f"op {op!r} not in RMW_OPS {isa.RMW_OPS}")
-        idx = jnp.asarray(idx).astype(jnp.int32).reshape(-1)
-        sub = _RmwSubmission(
-            self._ticket(tenant), jnp.asarray(table), idx,
-            jnp.asarray(values), op,
-            None if cond is None else jnp.asarray(cond).reshape(-1),
-            table_id=id(table), table_ref=table)
-        self._rmw_queue.append(sub)
-        return sub.ticket
+        jtable = jnp.asarray(table)
+        jidx = jnp.asarray(idx).astype(jnp.int32).reshape(-1)
+        leaf = plan_nodes.RmwNode(
+            nid=-1, ticket=self._ticket(tenant), table=jtable, idx=jidx,
+            values=jnp.asarray(values), op=op,
+            cond=None if cond is None else jnp.asarray(cond).reshape(-1),
+            table_id=id(table), table_ref=table,
+            n_lanes=int(jidx.shape[0]), table_rows=int(jtable.shape[0]))
+        self._rmw_queue.append(leaf)
+        return leaf.ticket
 
     # -- retrieval -----------------------------------------------------------
 
     def poll(self, ticket: Ticket):
         """Non-blocking: the retired result, a ``FailedResult`` if the
-        owning group's execution raised, or None while still queued."""
+        owning plan node's execution raised, or None while still queued."""
         return self._results.get(ticket.tid)
 
     def result(self, ticket: Ticket):
         """Retrieve (and forget) a result, flushing first if needed.
-        Re-raises the execution error if this ticket's group failed."""
+        Re-raises the execution error if this ticket's node failed."""
         if ticket.tid not in self._results:
-            if any(s.ticket.tid == ticket.tid
+            if any(leaf.ticket.tid == ticket.tid
                    for q in (self._queue, self._gather_queue,
-                             self._rmw_queue) for s in q):
-                self.flush()
+                             self._rmw_queue) for leaf in q):
+                self.flush(inflight_ok=True)
             if ticket.tid not in self._results:
                 raise KeyError(f"unknown ticket {ticket}")
         out = self._results.pop(ticket.tid)
@@ -352,8 +378,8 @@ class Scheduler:
         no standing head-of-line advantage.
         """
         by_tenant: "OrderedDict[str, deque]" = OrderedDict()
-        for sub in queue:
-            by_tenant.setdefault(sub.ticket.tenant, deque()).append(sub)
+        for leaf in queue:
+            by_tenant.setdefault(leaf.ticket.tenant, deque()).append(leaf)
         tenants = list(by_tenant)
         if not tenants:
             return []
@@ -371,9 +397,66 @@ class Scheduler:
                     tenants.remove(t)
         return out
 
+    # -- lowering (submission leaves -> AccessPlan) --------------------------
+
+    def _lower_pending(self) -> plan_nodes.Plan:
+        """Lower the pending queues through the plan pass pipeline.
+
+        The lowering is cached against the exact queue contents (and
+        round-robin cursor), so ``explain()`` followed by ``flush()``
+        lowers once and executes the very plan it reported. Lowering
+        *decisions* additionally hit the structural plan cache
+        (``window_signature`` -> ``Skeleton``) across windows.
+        """
+        fingerprint = (tuple(id(leaf) for leaf in self._queue),
+                       tuple(id(leaf) for leaf in self._gather_queue),
+                       tuple(id(leaf) for leaf in self._rmw_queue),
+                       self._rr_cursor)
+        if self._lowered is not None and self._lowered[0] == fingerprint:
+            return self._lowered[1]
+        cursor = self._rr_cursor
+        leaves = (tuple(self._fair_order(self._queue, cursor))
+                  + tuple(self._fair_order(self._gather_queue, cursor))
+                  + tuple(self._fair_order(self._rmw_queue, cursor)))
+        order = tuple((leaf.ticket.tenant, leaf.ticket.tid)
+                      for leaf in leaves)
+        backend = plan_emit.backend_for(self.engine)
+        signature = plan_passes.window_signature(
+            leaves, self.max_batch, backend.name)
+        skeleton = None
+        if leaves:
+            skeleton = self._plan_cache.get(signature)
+            if skeleton is not None:
+                self._plan_cache.move_to_end(signature)
+                self.stats["plan_cache_hits"] += 1
+            else:
+                self.stats["plan_cache_misses"] += 1
+        ctx = plan_passes.LowerContext(
+            max_batch=self.max_batch, cost=self.cost, engine=self.engine,
+            num_shards=int(getattr(self.engine, "num_shards", 1)),
+            sharded_capable=backend.sharded, replay=skeleton)
+        plan = plan_passes.lower(leaves, order, ctx, backend)
+        plan.signature = signature
+        plan.cache_hit = skeleton is not None
+        if leaves and skeleton is None:
+            self._plan_cache[signature] = plan_passes.skeleton_of(plan)
+            while len(self._plan_cache) > PLAN_CACHE_SIZE:
+                self._plan_cache.popitem(last=False)
+        self._lowered = (fingerprint, plan)
+        return plan
+
+    def explain(self) -> Explanation:
+        """Lower the *pending* window (without executing or consuming it)
+        and return the renderable plan — per-pass deltas, fusion and
+        coalescing decisions, chosen backends. The next ``flush`` executes
+        exactly this plan (same object, same node ids), which then rides
+        on ``FlushReport.plan``.
+        """
+        return Explanation(self._lower_pending())
+
     # -- execution -----------------------------------------------------------
 
-    def flush(self) -> FlushReport:
+    def flush(self, *, inflight_ok: bool = False) -> FlushReport:
         """Blocking flush: dispatch the window and wait for retirement.
 
         A thin wrapper over ``flush_async`` — the decoupled access/execute
@@ -381,123 +464,134 @@ class Scheduler:
         iteration k+1's access window can dispatch while iteration k's
         compute is still in flight.
         """
-        return self.flush_async().result()
+        return self.flush_async(inflight_ok=inflight_ok).result()
 
-    def flush_async(self) -> FlushHandle:
-        """Drain the queues: group, batch, dispatch, retire results.
+    def flush_async(self, *, inflight_ok: bool = False) -> FlushHandle:
+        """Drain the queues: lower to a plan, emit every node, retire.
 
-        Non-blocking: every group is *dispatched* (JAX async dispatch — the
+        Non-blocking: every node is *dispatched* (JAX async dispatch — the
         XLA computations run behind the returned handle); ``poll``/
-        ``result`` on the ``FlushHandle`` observe/await retirement. A group
+        ``result`` on the ``FlushHandle`` observe/await retirement. A node
         whose execution raises does not poison the flush: its members'
         tickets resolve to ``FailedResult`` (re-raised by ``result``) and
-        every other group still executes.
+        every other node still executes.
+
+        While a previous async window is still in flight (its handle
+        neither resolved via ``result()`` nor observed retired via
+        ``poll()``), another flush raises ``RuntimeError`` unless
+        ``inflight_ok=True`` — multi-window overlap is exactly what the
+        decoupled pipeline does deliberately, and what an unmanaged caller
+        gets by accident.
         """
-        cursor = self._rr_cursor
+        prev = self._inflight() if self._inflight is not None else None
+        if prev is not None and not prev.done and not inflight_ok:
+            raise RuntimeError(
+                "flush while a previous async flush window is still in "
+                "flight: resolve its FlushHandle (result()) or poll() it "
+                "to retirement first, or pass inflight_ok=True to overlap "
+                "windows deliberately (what repro.pipeline.DecoupledLoop "
+                "does)")
+        try:
+            plan = self._lower_pending()
+        except Exception as e:
+            # last resort: per-leaf/per-node isolation lives in the
+            # passes, but an unforeseen lowering failure must still fail
+            # the WINDOW, never poison the scheduler — drain the queues,
+            # resolve every pending ticket to FailedResult, and leave
+            # future flushes healthy
+            pending = (self._queue + self._gather_queue + self._rmw_queue)
+            self._queue, self._gather_queue, self._rmw_queue = [], [], []
+            self._lowered = None
+            self._rr_cursor += 1
+            self.stats["flushes"] += 1
+            self.stats["group_errors"] += 1
+            failed = FailedResult(e)
+            for leaf in pending:
+                self._results.setdefault(leaf.ticket.tid, failed)
+            report = FlushReport(
+                order=tuple((lf.ticket.tenant, lf.ticket.tid)
+                            for lf in pending),
+                groups=(), n_programs=0, n_gathers=0, n_rmws=0)
+            handle = FlushHandle(report, ())
+            self._inflight = weakref.ref(handle)
+            return handle
+        self._queue, self._gather_queue, self._rmw_queue = [], [], []
+        self._lowered = None
         self._rr_cursor += 1                 # once per flush, not per queue
-        order = self._fair_order(self._queue, cursor)
-        self._queue = []
-        groups: "OrderedDict[tuple, List[_Submission]]" = OrderedDict()
-        for sub in order:
-            # max_batch splits a key into successive waves
-            wave = 0
-            while (sub.group_key, wave) in groups and \
-                    len(groups[(sub.group_key, wave)]) >= self.max_batch:
-                wave += 1
-            groups.setdefault((sub.group_key, wave), []).append(sub)
 
-        reports = []
-        for members in groups.values():
-            try:
-                reports.append(self._execute_group(members))
-            except Exception as e:
-                self.stats["group_errors"] += 1
-                for sub in members:
-                    # keep results of members that did retire (fallback path)
-                    self._results.setdefault(sub.ticket.tid, FailedResult(e))
-                reports.append(GroupReport(
-                    len(members), members[0].program.name, vmapped=False,
-                    fell_back=False, error=repr(e)))
+        ctx = plan_emit.EmitContext(
+            scheduler=self, engine=self.engine, results=self._results,
+            stats=self.stats, make_failed=FailedResult,
+            make_group_error=lambda node, e: GroupReport(
+                len(node.members), node.members[0].program.name,
+                vmapped=False, fell_back=False, error=repr(e)))
+        plan_emit.execute(plan, ctx, plan_emit.backend_for(self.engine))
 
-        gq = self._fair_order(self._gather_queue, cursor)
-        self._gather_queue = []
-        try:
-            gather_streams, shard_stats = self._execute_gathers(gq)
-        except Exception as e:
-            self.stats["group_errors"] += 1
-            gather_streams, shard_stats = {}, {}
-            for sub in gq:
-                self._results.setdefault(sub.ticket.tid, FailedResult(e))
-
-        # RMWs retire after gathers: within one window, reads observe the
-        # window's initial table state and writes land at window end.
-        rq = self._fair_order(self._rmw_queue, cursor)
-        self._rmw_queue = []
-        try:
-            rmw_streams = self._execute_rmws(rq, shard_stats)
-        except Exception as e:
-            self.stats["group_errors"] += 1
-            rmw_streams = {}
-            for sub in rq:
-                self._results.setdefault(sub.ticket.tid, FailedResult(e))
-
+        counts = plan.counts()
         self.stats["flushes"] += 1
-        self.stats["programs"] += len(order)
-        self.stats["gathers"] += len(gq)
-        self.stats["rmws"] += len(rq)
-        retired = list(order) + list(gq) + list(rq)
+        self.stats["programs"] += counts["programs"]
+        self.stats["gathers"] += counts["gathers"]
+        self.stats["rmws"] += counts["rmws"]
+
+        gather_streams = {g.table_id: tuple(g.streams)
+                          for g in plan.fused("gather")}
+        rmw_streams = {(r.table_id, r.op): tuple(m.idx for m in r.members)
+                       for r in plan.fused("rmw")}
         report = FlushReport(
-            order=tuple((s.ticket.tenant, s.ticket.tid) for s in retired),
-            groups=tuple(reports),
-            n_programs=len(order),
-            n_gathers=len(gq),
-            shard_stats=shard_stats,
-            n_rmws=len(rq),
+            order=plan.order,
+            groups=tuple(ctx.group_reports),
+            n_programs=counts["programs"],
+            n_gathers=counts["gathers"],
+            shard_stats=ctx.shard_stats,
+            n_rmws=counts["rmws"],
+            plan=plan,
             _gather_thunk=(lambda s=gather_streams: {
                 k: reorder.cross_stream_gain(v) for k, v in s.items()}),
             _rmw_thunk=(lambda s=rmw_streams: {
                 k: reorder.cross_stream_gain(v) for k, v in s.items()}))
         leaves = jax.tree_util.tree_leaves(
-            [v for v in (self._results.get(s.ticket.tid) for s in retired)
+            [v for v in (self._results.get(tid) for _, tid in plan.order)
              if v is not None and not isinstance(v, FailedResult)])
-        return FlushHandle(report, tuple(leaves))
+        plan.strip()   # release array payloads; structure stays readable
+        handle = FlushHandle(report, tuple(leaves))
+        self._inflight = weakref.ref(handle)
+        return handle
 
-    def _execute_group(self, members: List[_Submission]) -> GroupReport:
+    # -- emitters (registered on the "local" backend) ------------------------
+    # Thin by contract: every fusion/grouping/backend decision was made by
+    # the passes; these only execute the annotated node.
+
+    def _execute_group(self, node: plan_nodes.BatchedGroup,
+                       ctx: plan_emit.EmitContext) -> None:
+        members = node.members
         prog = members[0].program
         # streams are extracted eagerly (cheap NumPy, and it must not pin
         # the members' envs in a long-lived report); the gain computation
         # itself stays lazy — it runs only if the report is actually read
         entries = _coalescing_entries(members)
         thunk = (lambda e=entries: _coalescing_gains(e))
-        if len(members) == 1:
-            self.stats["singleton_groups"] += 1
-            exe = self.engine.executable(prog)
-            sub = members[0]
-            out_env, out_spd = exe(sub.env, sub.regs, {})
-            self._results[sub.ticket.tid] = (out_env, out_spd)
-            return GroupReport(1, prog.name, vmapped=False, fell_back=False,
-                               _coalescing_thunk=thunk)
+        if node.backend != "vmap":
+            if len(members) == 1:
+                self.stats["singleton_groups"] += 1
+            for sub in members:
+                exe = self.engine.executable(sub.program)
+                self._results[sub.ticket.tid] = exe(sub.env, sub.regs, {})
+            ctx.group_reports.append(GroupReport(
+                len(members), prog.name, vmapped=False, fell_back=False,
+                _coalescing_thunk=thunk))
+            return
 
-        # Regions backed by the same caller array in every member and never
-        # written by the program ride along unstacked (closed over by the
-        # vmapped lane): one resident copy of a shared table serves all
-        # lanes. Stacking/unstacking of everything else happens inside the
-        # jitted batch computation — one XLA dispatch for the whole group.
-        written = _written_regions(prog)
-        shared = frozenset(
-            k for k in members[0].env
-            if k not in written
-            and len({s.src_ids.get(k) for s in members}) == 1)
         exe = self.engine.executable(prog, batch=len(members),
-                                     shared=shared)
+                                     shared=node.shared)
         try:
             outs = exe.run_batch([s.env for s in members],
                                  [s.regs for s in members])
             for sub, out in zip(members, outs):
                 self._results[sub.ticket.tid] = out
             self.stats["vmap_groups"] += 1
-            return GroupReport(len(members), prog.name, vmapped=True,
-                               fell_back=False, _coalescing_thunk=thunk)
+            ctx.group_reports.append(GroupReport(
+                len(members), prog.name, vmapped=True, fell_back=False,
+                _coalescing_thunk=thunk))
         except Exception:
             # vmap could not trace this program shape: run each member
             # through the (still cached) single-program executable.
@@ -505,120 +599,39 @@ class Scheduler:
             for sub in members:
                 exe1 = self.engine.executable(sub.program)
                 self._results[sub.ticket.tid] = exe1(sub.env, sub.regs, {})
-            return GroupReport(len(members), prog.name, vmapped=False,
-                               fell_back=True, _coalescing_thunk=thunk)
+            ctx.group_reports.append(GroupReport(
+                len(members), prog.name, vmapped=False, fell_back=True,
+                _coalescing_thunk=thunk))
 
-    def _execute_gathers(self, subs: List[_GatherSubmission]) -> tuple:
-        """Fuse pending gathers per table: ONE coalesced fetch serves all.
+    def _execute_gathers(self, node: plan_nodes.FusedGather,
+                         ctx: plan_emit.EmitContext) -> None:
+        if node.backend == "eager":
+            # direct clamped read — the coalesce pass decided dedup
+            # cannot pay for itself on this stream
+            for m, stream in zip(node.members, node.streams):
+                self._results[m.ticket.tid] = node.table[stream]
+            return
+        packed = node.table[node.unique_idx]   # single fused fetch
+        for m, inv in zip(node.members, node.inverses):
+            self._results[m.ticket.tid] = packed[inv]
 
-        Rows requested by several tenants are fetched once (`coalesce` over
-        the concatenated streams) — the paper's cross-core row reuse. When
-        the backing engine spans a device mesh (duck-typed on
-        ``sharded_gather`` so core never imports ``repro.distributed``),
-        the fused fetch itself is executed owner-locally per shard and the
-        exchange/coalescing record lands in ``FlushReport.shard_stats``.
-        """
-        by_table: "OrderedDict[int, List[_GatherSubmission]]" = OrderedDict()
-        for s in subs:
-            by_table.setdefault(s.table_id, []).append(s)
-        stream_refs = {}
-        shard_stats = {}
-        sharded = getattr(self.engine, "sharded_gather", None)
-        num_shards = int(getattr(self.engine, "num_shards", 1))
-        for tid_key, group in by_table.items():
-            table = group[0].table
-            # loads clamp (policy): the fused fetch sees the same clamped
-            # stream bulk_gather would, so the fast path cannot diverge
-            streams = [jnp.clip(s.idx, 0, table.shape[0] - 1)
-                       for s in group]
-            unique_idx, inverses, n_unique = reorder.coalesce_streams(streams)
-            if sharded is not None and table.shape[0] >= num_shards:
-                # the fused fetch spans the mesh: every row is served by
-                # its owner shard (address-range split, §6.6). Coalesce
-                # padding (replicas of the max index) is masked out rather
-                # than sliced off: pad lanes would skew the exchange toward
-                # the max row's owner and pollute the per-shard stats, but
-                # a data-dependent slice length would force a fresh
-                # shard_map trace per distinct n_unique and a host sync
-                # here — the mask keeps shapes static and dispatch async.
-                pad_valid = (jnp.arange(unique_idx.shape[0],
-                                        dtype=jnp.int32) < n_unique)
-                packed = sharded(table, unique_idx, valid=pad_valid)
-                if self.engine.last_shard_stats is not None:
-                    shard_stats[tid_key] = self.engine.last_shard_stats
-            else:
-                packed = table[unique_idx]   # single fused fetch
-            for s, inv in zip(group, inverses):
-                self._results[s.ticket.tid] = packed[inv]
-            stream_refs[tid_key] = tuple(streams)
-        return stream_refs, shard_stats
-
-    def _execute_rmws(self, subs: List[_RmwSubmission],
-                      shard_stats: Dict) -> Dict:
-        """Fuse pending RMWs per (table, op): ONE combined update each.
-
-        Streams against the same table object with the same op are
-        concatenated and run through a single ``bulk_rmw`` — duplicate
-        destinations across tenants segment-combine before the unique
-        scatter touches the table (legal because RMW_OPS are associative +
-        commutative, §3.1). Different ops on one table chain in first-
-        appearance order; every ticket resolves to the table's end-of-
-        window state. On a mesh-backed engine the fused update runs
-        owner-locally per shard (``sharded_rmw``, duck-typed) and its
-        exchange record lands in ``shard_stats`` under
-        ``("rmw", table_id, op)``.
-        """
-        from repro.core import bulk_ops
-        groups: "OrderedDict[tuple, List[_RmwSubmission]]" = OrderedDict()
-        for s in subs:
-            groups.setdefault((s.table_id, s.op), []).append(s)
-        tables: Dict[int, jax.Array] = {}
-        members: Dict[int, List[_RmwSubmission]] = {}
-        stream_refs = {}
-        sharded = getattr(self.engine, "sharded_rmw", None)
-        num_shards = int(getattr(self.engine, "num_shards", 1))
-        for (tid_key, op), group in groups.items():
-            table = tables.get(tid_key, group[0].table)
-            members.setdefault(tid_key, []).extend(group)
-            idx = jnp.concatenate([s.idx for s in group]) if len(group) > 1 \
-                else group[0].idx
-            vals = [jnp.asarray(s.values).reshape(
-                        (s.idx.shape[0],) + table.shape[1:]).astype(
-                        table.dtype) for s in group]
-            values = jnp.concatenate(vals) if len(vals) > 1 else vals[0]
-            cond = None
-            if any(s.cond is not None for s in group):
-                cond = jnp.concatenate(
-                    [s.cond if s.cond is not None
-                     else jnp.ones((s.idx.shape[0],), bool) for s in group])
-            if sharded is not None and table.shape[0] >= num_shards:
-                if cond is not None:
-                    # sharded_rmw carries no mask: neutralise masked lanes
-                    # with the op identity (a no-op on the table)
-                    ident = isa.rmw_identity(op, table.dtype)
-                    cshape = (-1,) + (1,) * (values.ndim - 1)
-                    values = jnp.where(cond.reshape(cshape), values, ident)
-                new = sharded(table, idx, values, op=op)
-                if self.engine.last_shard_stats is not None:
-                    shard_stats[("rmw", tid_key, op)] = \
-                        self.engine.last_shard_stats
-            else:
-                new = bulk_ops.bulk_rmw(table, idx, values, op=op,
-                                        cond=cond,
-                                        optimize=self.engine.optimize)
-            tables[tid_key] = new
-            stream_refs[(tid_key, op)] = tuple(s.idx for s in group)
-        for tid_key, group in members.items():
-            for s in group:
-                self._results[s.ticket.tid] = tables[tid_key]
-        return stream_refs
-
-    # (cross-program coalescing measurement lives in the module-level
-    # helpers below so the lazy report thunk closes over extracted index
-    # streams only — never over submissions or their envs)
+    def _execute_rmws(self, node: plan_nodes.FusedRmw,
+                      ctx: plan_emit.EmitContext) -> None:
+        table = ctx.tables.get(node.table_id, node.table)
+        new = bulk_ops.bulk_rmw(table, node.idx, node.values, op=node.op,
+                                cond=node.cond,
+                                optimize=self.engine.optimize)
+        ctx.tables[node.table_id] = new
+        ctx.rmw_members.setdefault(node.table_id, []).extend(node.members)
 
 
-def _coalescing_entries(members: List[_Submission]) -> Dict[str, list]:
+# ---------------------------------------------------------------------------
+# cross-program coalescing measurement (module-level so the lazy report
+# thunk closes over extracted index streams only — never over plan leaves
+# or their envs)
+# ---------------------------------------------------------------------------
+
+def _coalescing_entries(members: Sequence) -> Dict[str, list]:
     """Per target region: [(caller-array id, static index stream), ...]
     across the group's members. Small NumPy arrays only."""
     per_region: Dict[str, list] = {}
@@ -647,14 +660,8 @@ def _coalescing_gains(per_region: Dict[str, list]) -> Dict:
     return out
 
 
-def _written_regions(program: isa.AccessProgram) -> set:
-    """Regions the program stores to (IST/IRMW/SST bases) — never safe to
-    share across vmap lanes."""
-    return {ins.base for ins in program.instrs
-            if isinstance(ins, (isa.IST, isa.IRMW, isa.SST))}
-
-
-def _static_index_streams(sub: _Submission) -> Dict[str, np.ndarray]:
+def _static_index_streams(sub: plan_nodes.ProgramNode) \
+        -> Dict[str, np.ndarray]:
     """Best-effort static evaluation of each ILD's index stream.
 
     Walks the program propagating tiles computable from python-int regs and
@@ -705,3 +712,30 @@ def _static_index_streams(sub: _Submission) -> Dict[str, np.ndarray]:
             except Exception:
                 continue
     return {r: np.concatenate(s) for r, s in streams.items() if s}
+
+
+# ---------------------------------------------------------------------------
+# "local" backend registration: the default pass table plus this module's
+# thin emitters. The sharded variant is registered by
+# ``repro.distributed.engine`` — never probed from here.
+# ---------------------------------------------------------------------------
+
+def _emit_program_group(node, ctx):
+    ctx.scheduler._execute_group(plan_nodes.unwrap(node), ctx)
+
+
+def _emit_fused_gather(node, ctx):
+    ctx.scheduler._execute_gathers(plan_nodes.unwrap(node), ctx)
+
+
+def _emit_fused_rmw(node, ctx):
+    ctx.scheduler._execute_rmws(plan_nodes.unwrap(node), ctx)
+
+
+plan_emit.register_backend("local", emitters={
+    ("program_group", "vmap"): _emit_program_group,
+    ("program_group", "eager"): _emit_program_group,
+    ("gather", "bulk"): _emit_fused_gather,
+    ("gather", "eager"): _emit_fused_gather,
+    ("rmw", "bulk"): _emit_fused_rmw,
+})

@@ -23,12 +23,16 @@ fabric:
 
 ``ShardedEngine`` extends ``Engine``: programs, the compile cache and the
 ``Scheduler`` frontend all keep working, batched program groups additionally
-fan out lane-wise across the mesh (``_constrain_batch``), and the
-``Scheduler`` gather fast path routes fused fetches through
-``sharded_gather`` (duck-typed — core never imports this package).
+fan out lane-wise across the mesh (``_constrain_batch``). Importing this
+module registers the **"sharded" plan backend** (``repro.plan.emit``): a
+shard pass that wraps mesh-eligible fused gather/RMW nodes in
+``ShardedNode`` (cost-model placement) plus the owner-local emitters —
+core lowers through the registry and never imports (or duck-type-probes)
+this package.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, Optional
 
 import jax
@@ -38,6 +42,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import plan
 from repro.core import bulk_ops, isa, reorder
 from repro.core.engine import Engine
 from repro.distributed import exchange
@@ -112,6 +117,8 @@ class ShardedEngine(Engine):
     mesh degenerates to single-device behaviour (and is how the parity
     harness anchors the collective path to the oracle).
     """
+
+    plan_backend = "sharded"     # registered below at import time
 
     def __init__(self, mesh=None, *, tile_size: int = 16384,
                  optimize: bool = True, use_kernel: bool = False):
@@ -303,3 +310,99 @@ class ShardedEngine(Engine):
         ns = self.num_shards
         self.last_shard_stats = ShardStats(
             sent=sent.reshape(ns, ns), received=recv, unique=uniq)
+
+
+# ---------------------------------------------------------------------------
+# "sharded" plan backend: shard-placement pass + owner-local emitters.
+# Registered at import (base: the scheduler's "local" backend) — the
+# scheduler routes through the registry keyed on ``Engine.plan_backend``.
+# ---------------------------------------------------------------------------
+
+def _shard_place(p: "plan.Plan", ctx: "plan.LowerContext") -> "plan.Plan":
+    """The mesh variant of the pipeline's ``shard`` slot: per fused node
+    the cost model (or the replayed plan-cache skeleton) picks "bulk" vs
+    "sharded"; mesh-placed nodes are wrapped in ``ShardedNode`` so the
+    emit stage dispatches them to the owner-local emitters below."""
+    roots, notes, gi, ri = [], [], 0, 0
+    replay = ctx.replay
+    for node in p.roots:
+        if getattr(node, "error", None) is not None:
+            roots.append(node)         # error nodes never place
+            continue
+        if isinstance(node, plan.FusedGather):
+            if node.backend == "eager":
+                backend = "eager"
+            elif replay is not None and gi < len(replay.gather_backends):
+                backend = replay.gather_backends[gi]
+            else:
+                backend = ctx.cost.gather_backend(node, ctx)
+            gi += 1
+        elif isinstance(node, plan.FusedRmw):
+            if replay is not None and ri < len(replay.rmw_backends):
+                backend = replay.rmw_backends[ri]
+            else:
+                backend = ctx.cost.rmw_backend(node, ctx)
+            ri += 1
+        else:
+            roots.append(node)
+            continue
+        if backend != node.backend:
+            node = dataclasses.replace(node, backend=backend)
+        if backend == "sharded":
+            node = plan.ShardedNode(nid=ctx.nid(), inner=node,
+                                    num_shards=ctx.num_shards)
+            notes.append(f"{node.inner.kind}#{node.inner.nid} -> sharded "
+                         f"(mesh={ctx.num_shards}, "
+                         f"rows={node.inner.table_rows})")
+        else:
+            notes.append(f"{node.kind}#{node.nid} -> {backend} "
+                         f"(rows={node.table_rows} < mesh or forced)")
+        roots.append(node)
+    p = dataclasses.replace(p, roots=tuple(roots))
+    d = plan.PassDelta("shard", len(p.leaves) + len(roots),
+                       len(p.leaves) + len(roots), tuple(notes))
+    return dataclasses.replace(p, trace=p.trace + (d,))
+
+
+def _emit_gather_sharded(node, ctx: "plan.EmitContext"):
+    """Owner-local fused fetch across the mesh. Coalesce padding
+    (replicas of the max index) is masked out via ``pad_valid`` rather
+    than sliced off: pad lanes would skew the exchange toward the max
+    row's owner and pollute the per-shard stats, but a data-dependent
+    slice length would force a fresh shard_map trace per distinct
+    n_unique and a host sync — the mask keeps shapes static and dispatch
+    async."""
+    g = plan.unwrap(node)
+    packed = ctx.engine.sharded_gather(g.table, g.unique_idx,
+                                       valid=g.pad_valid)
+    if ctx.engine.last_shard_stats is not None:
+        ctx.shard_stats[g.table_id] = ctx.engine.last_shard_stats
+    for m, inv in zip(g.members, g.inverses):
+        ctx.results[m.ticket.tid] = packed[inv]
+
+
+def _emit_rmw_sharded(node, ctx: "plan.EmitContext"):
+    """Owner-local fused RMW across the mesh; masked lanes are
+    neutralised with the op identity (``sharded_rmw`` carries no mask)."""
+    r = plan.unwrap(node)
+    table = ctx.tables.get(r.table_id, r.table)
+    values = r.values
+    if r.cond is not None:
+        ident = isa.rmw_identity(r.op, table.dtype)
+        cshape = (-1,) + (1,) * (values.ndim - 1)
+        values = jnp.where(r.cond.reshape(cshape), values, ident)
+    new = ctx.engine.sharded_rmw(table, r.idx, values, op=r.op)
+    if ctx.engine.last_shard_stats is not None:
+        ctx.shard_stats[("rmw", r.table_id, r.op)] = \
+            ctx.engine.last_shard_stats
+    ctx.tables[r.table_id] = new
+    ctx.rmw_members.setdefault(r.table_id, []).extend(r.members)
+
+
+plan.register_backend(
+    "sharded", base="local", sharded=True,
+    passes_override={"shard": _shard_place},
+    emitters={
+        ("gather", "sharded"): _emit_gather_sharded,
+        ("rmw", "sharded"): _emit_rmw_sharded,
+    })

@@ -110,7 +110,10 @@ class DecoupledLoop:
     def _dispatch_window(self, access: Callable, k: int,
                          state) -> Optional[AccessWindow]:
         tickets = access(self, k, state)
-        handle = self.target.flush_async()
+        # inflight_ok: keeping several access windows in flight is this
+        # loop's entire purpose — the scheduler's in-flight guard exists
+        # for callers that overlap windows by accident, not by design
+        handle = self.target.flush_async(inflight_ok=True)
         self.stats["windows"] += 1
         if tickets is None:
             return None

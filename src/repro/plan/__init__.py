@@ -1,0 +1,47 @@
+"""repro.plan — the AccessPlan IR and its lowering pipeline.
+
+Every execution path (``Scheduler.flush``, the decoupled pipeline,
+``serve.AccessService``, the sharded engine) lowers one flush window
+through the same deterministic pass pipeline
+
+    normalize -> group -> fuse -> coalesce -> shard -> batch -> emit
+
+over a typed plan tree (``nodes``), with backend selection made by a
+small cost model (``cost``) and execution dispatched through registered
+per-backend emitters (``emit``) — new optimizations become new passes,
+not new code paths. ``explain`` renders any lowered plan with per-pass
+deltas; the plan a pre-flush ``Scheduler.explain()`` reports is exactly
+the plan the flush executes (node ids round-trip into the
+``FlushReport``).
+
+This package deliberately imports nothing from ``repro.core`` at module
+scope: core registers the "local" backend here, ``repro.distributed``
+registers "sharded", and the registry — not duck-typing — routes every
+window.
+"""
+from repro.plan import cost, emit, nodes, passes
+from repro.plan.cost import CostModel
+from repro.plan.emit import (Backend, EmitContext, backend_for, execute,
+                             get_backend, register_backend)
+from repro.plan.explain import Explanation
+from repro.plan.explain import explain as explain_plan
+from repro.plan.nodes import (BatchedGroup, FusedGather, FusedRmw,
+                              GatherNode, PassDelta, Plan, PlanNode,
+                              ProgramNode, RmwNode, ShardedNode, unwrap)
+from repro.plan.passes import (PIPELINE, LowerContext, Skeleton, lower,
+                               skeleton_of, window_signature)
+
+# ``plan.explain(flush)`` is the documented spelling: the package
+# attribute is the function (the module itself stays importable as
+# ``repro.plan.explain`` through sys.modules).
+explain = explain_plan
+
+__all__ = [
+    "cost", "emit", "explain", "nodes", "passes",
+    "CostModel", "Backend", "EmitContext", "backend_for", "execute",
+    "get_backend", "register_backend", "Explanation", "explain_plan",
+    "BatchedGroup", "FusedGather", "FusedRmw", "GatherNode", "PassDelta",
+    "Plan", "PlanNode", "ProgramNode", "RmwNode", "ShardedNode", "unwrap",
+    "PIPELINE", "LowerContext", "Skeleton", "lower", "skeleton_of",
+    "window_signature",
+]

@@ -1,0 +1,127 @@
+"""Cost model: per-node backend selection during lowering.
+
+Replaces the hard-coded path heuristics the scheduler's three execution
+paths used to carry inline. Inputs, per the plan-IR contract
+(DESIGN.md §9): stream sizes, *measured* coalescing factors (host-side,
+only when the streams are already resident — never a device sync), mesh
+width and table extent, and the engine's compile-cache state
+(``structural_signature`` keyed — surfaced through the batch pass's
+``cache_hit`` annotation).
+
+Decisions:
+
+  program groups   "vmap" (one lane-stacked jitted call) for n > 1,
+                   "eager" singletons — the trace amortizes across waves
+                   either way, so width is the deciding input
+  fused gathers    "eager" (direct clamped read — skips the sort+unique)
+                   only for a lone stream whose measurement positively
+                   shows no duplication; "bulk" (coalesced fetch) for
+                   everything else — multi-stream windows AND unmeasured
+                   streams (in flight / over budget) keep the engine's
+                   always-coalesce default; "sharded" when the engine
+                   spans a mesh and the table is wide enough to partition
+  fused RMWs       "bulk" or "sharded" (an unordered eager scatter would
+                   change float reduction order, so writes always go
+                   through the segment-combining bulk path)
+
+``force_*`` pins a choice — the differential tests run every legal
+backend against the cost model's pick and assert bit-equality.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+GATHER_BACKENDS = ("eager", "bulk", "sharded")
+RMW_BACKENDS = ("bulk", "sharded")
+PROGRAM_BACKENDS = ("eager", "vmap")
+
+
+@dataclasses.dataclass
+class CostModel:
+    force_gather: Optional[str] = None
+    force_rmw: Optional[str] = None
+    force_program: Optional[str] = None
+    # streams longer than this are never measured (host dedup is
+    # O(n log n); past this point the answer wouldn't change the pick)
+    measure_limit: int = 1 << 16
+    # measured coalescing factor below which a lone stream skips the
+    # coalesce machinery entirely
+    eager_factor_cutoff: float = 1.05
+
+    def __post_init__(self):
+        for v, legal in ((self.force_gather, GATHER_BACKENDS),
+                         (self.force_rmw, RMW_BACKENDS),
+                         (self.force_program, PROGRAM_BACKENDS)):
+            if v is not None and v not in legal:
+                raise ValueError(f"forced backend {v!r} not in {legal}")
+
+    # -- gathers -------------------------------------------------------------
+
+    def _sharded_eligible(self, node, ctx) -> bool:
+        return ctx.sharded_capable and node.table_rows >= ctx.num_shards
+
+    def gather_path(self, node, ctx) -> tuple:
+        """("eager" | "coalesce", measured factor or None) for one
+        ``FusedGather``. Coalescing is mandatory whenever the node may
+        go to the mesh (the exchange ships the deduped set) or more than
+        one stream fused (cross-request reuse is the whole point)."""
+        if self.force_gather == "eager":
+            return "eager", self.measure_factor(node)
+        if self.force_gather in ("bulk", "sharded"):
+            return "coalesce", None
+        if self._sharded_eligible(node, ctx):
+            return "coalesce", None
+        if len(node.streams) > 1:
+            return "coalesce", None
+        factor = self.measure_factor(node)
+        if factor is not None and factor <= self.eager_factor_cutoff:
+            # measurement POSITIVELY shows a duplication-free lone stream:
+            # dedup cannot pay for its sort+unique. An unmeasurable stream
+            # (still in flight, or past the measurement budget) keeps the
+            # always-coalesce default — dropping dedup on unknown data
+            # would forfeit the row reuse this engine exists for.
+            return "eager", factor
+        return "coalesce", factor
+
+    def gather_backend(self, node, ctx) -> str:
+        """"bulk" | "sharded" for an already-coalesced FusedGather."""
+        if self.force_gather == "bulk":
+            return "bulk"
+        if self.force_gather == "sharded":
+            return "sharded" if self._sharded_eligible(node, ctx) \
+                else "bulk"
+        return "sharded" if self._sharded_eligible(node, ctx) else "bulk"
+
+    def measure_factor(self, node) -> Optional[float]:
+        """Host-side coalescing factor (#lanes / #distinct rows) of the
+        fused stream — only when every stream is already resident (a
+        stream still in flight behind JAX async dispatch must not be
+        forced: measurement may never block the flush hot path)."""
+        if node.n_lanes == 0 or node.n_lanes > self.measure_limit:
+            return None
+        for s in node.streams:
+            if hasattr(s, "is_ready") and not s.is_ready():
+                return None
+        cat = np.concatenate(
+            [np.asarray(s).reshape(-1) for s in node.streams])
+        return float(cat.shape[0] / max(np.unique(cat).shape[0], 1))
+
+    # -- RMWs ----------------------------------------------------------------
+
+    def rmw_backend(self, node, ctx) -> str:
+        if self.force_rmw == "bulk":
+            return "bulk"
+        if self.force_rmw == "sharded":
+            return "sharded" if self._sharded_eligible(node, ctx) \
+                else "bulk"
+        return "sharded" if self._sharded_eligible(node, ctx) else "bulk"
+
+    # -- program groups ------------------------------------------------------
+
+    def program_backend(self, members, ctx) -> str:
+        if self.force_program is not None:
+            return self.force_program
+        return "vmap" if len(members) > 1 else "eager"

@@ -97,26 +97,34 @@ class AccessService:
         comes back as soon as it is *dispatched* (JAX futures — callers
         that need a barrier block on the arrays themselves)."""
         if self.scheduler.poll(ticket) is None and self.scheduler.pending:
-            self.flush_async()
+            self.flush_async(inflight_ok=True)   # implicit resolve point
         return self.scheduler.result(ticket)
 
-    def flush(self) -> FlushReport:
-        self.last_report = self.scheduler.flush()
+    def flush(self, *, inflight_ok: bool = False) -> FlushReport:
+        self.last_report = self.scheduler.flush(inflight_ok=inflight_ok)
         return self.last_report
 
-    def flush_async(self) -> "FlushHandle":
+    def flush_async(self, *, inflight_ok: bool = False) -> "FlushHandle":
         """Non-blocking flush (see ``Scheduler.flush_async``): dispatches
         the window and returns its ``FlushHandle``; ``last_report`` is set
-        immediately (the report describes the dispatched window)."""
-        handle = self.scheduler.flush_async()
+        immediately (the report describes the dispatched window). Raises
+        ``RuntimeError`` if a previous async window is still in flight,
+        unless ``inflight_ok`` (deliberate multi-window overlap)."""
+        handle = self.scheduler.flush_async(inflight_ok=inflight_ok)
         self.last_report = handle.report
         return handle
+
+    def explain(self):
+        """Lower (without executing) the pending shared window: the
+        plan-IR view of what the next flush will do, per pass — see
+        ``Scheduler.explain``."""
+        return self.scheduler.explain()
 
     def _maybe_flush(self):
         # auto-flush dispatches without blocking: the whole point of the
         # threshold is to keep the device fed, not to stall the submitter
         if self.auto_flush and self.scheduler.pending >= self.auto_flush:
-            self.flush_async()
+            self.flush_async(inflight_ok=True)
 
     @property
     def pending(self) -> int:

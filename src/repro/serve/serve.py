@@ -49,7 +49,10 @@ class ServeLoop:
         queue = list(requests)
         while queue:
             if self.access is not None and self.access.pending:
-                self.access.flush()     # drain shared bulk-access work
+                # drain shared bulk-access work; inflight_ok — an earlier
+                # auto-flushed window may still be in flight, and this
+                # tick-loop drain is a deliberate resolve point
+                self.access.flush(inflight_ok=True)
             wave = queue[:self.batch_slots]
             queue = queue[self.batch_slots:]
             b = len(wave)

@@ -198,6 +198,100 @@ class _Gen:
             compiler.Load(h_name, compiler.BinOp("ADD", i_expr, 1)))
 
 
+@dataclasses.dataclass
+class MixedFlushCase:
+    """One *mixed* flush window: compiled programs + raw bulk gathers +
+    bulk RMWs against shared tables, submitted by several tenants and
+    executed in ONE ``Scheduler.flush`` — the full plan-IR pipeline
+    (group + fuse + coalesce + backend selection) in a single window.
+
+    Semantics fuzzed (and mirrored by the oracle in
+    ``harness.check_mixed_flush_parity``): gathers read the window's
+    *initial* table state, RMW tickets resolve to the *end-of-window*
+    state, OOB indices clamp on loads and drop on stores, and per table
+    only one RMW op appears (so the window's combine order is free —
+    bit-exact on integer tables however the pipeline fuses it).
+    """
+    name: str
+    seed: int
+    programs: list            # (pattern, env, n) — independent envs
+    gathers: list             # (table_name, idx)
+    rmws: list                # (table_name, idx, values, cond-or-None)
+    tables: Dict[str, np.ndarray]
+    table_ops: Dict[str, str]   # RMW table -> its single op
+
+
+def generate_mixed_case(seed: int) -> MixedFlushCase:
+    """Deterministically generate one mixed flush window from ``seed``."""
+    rng = np.random.default_rng(0xD100 + seed)
+    tables: Dict[str, np.ndarray] = {}
+    table_ops: Dict[str, str] = {}
+
+    # shared gather tables: 1-D and 2-D floats (values only, no math)
+    n_gt = int(rng.integers(1, 3))
+    for t in range(n_gt):
+        rows = int(rng.choice((64, 127, 256)))
+        if rng.random() < 0.5:
+            tables[f"G{t}"] = rng.normal(size=(rows,)).astype(np.float32)
+        else:
+            d = int(rng.integers(2, 7))
+            tables[f"G{t}"] = rng.normal(size=(rows, d)).astype(np.float32)
+
+    # shared RMW tables: integers (order-free mod 2^32) + sometimes a
+    # float ADD table (checked to tolerance — §3.1 reordered reduction)
+    n_rt = int(rng.integers(1, 3))
+    for t in range(n_rt):
+        rows = int(rng.choice((16, 64, 128)))
+        if rng.random() < 0.25:
+            tables[f"R{t}"] = rng.normal(size=(rows,)).astype(np.float32)
+            table_ops[f"R{t}"] = "ADD"
+        else:
+            dt = np.int32 if rng.random() < 0.5 else np.uint32
+            tables[f"R{t}"] = rng.integers(
+                0, 2 ** 12, size=(rows,)).astype(dt)
+            table_ops[f"R{t}"] = str(rng.choice(isa.RMW_OPS))
+
+    def stream(rows: int, n: int) -> np.ndarray:
+        s = rng.integers(0, rows, size=n).astype(np.int32)
+        if n and rng.random() < 0.125:      # OOB poison (clamp/drop policy)
+            k = max(1, n // 8)
+            pos = rng.choice(n, size=k, replace=False)
+            bad = np.where(rng.random(k) < 0.5,
+                           -rng.integers(1, rows + 2, size=k),
+                           rows + rng.integers(0, rows + 2, size=k))
+            s[pos] = bad.astype(np.int32)
+        return s
+
+    gathers = []
+    for _ in range(int(rng.integers(2, 7))):
+        name = f"G{int(rng.integers(0, n_gt))}"
+        n = int(rng.choice((0, 33, 100, 256)))
+        gathers.append((name, stream(tables[name].shape[0], n)))
+
+    rmws = []
+    for _ in range(int(rng.integers(2, 6))):
+        name = f"R{int(rng.integers(0, n_rt))}"
+        table = tables[name]
+        n = int(rng.choice((7, 64, 200)))
+        idx = stream(table.shape[0], n)
+        if table.dtype == np.float32:
+            vals = rng.normal(size=n).astype(np.float32)
+        else:
+            vals = rng.integers(0, 2 ** 10, size=n).astype(table.dtype)
+        cond = (rng.random(n) < 0.7) if rng.random() < 0.4 else None
+        rmws.append((name, idx, vals, cond))
+
+    # independent compiled programs ride in the same window
+    programs = []
+    for k in range(int(rng.integers(1, 4))):
+        c = generate_case(100_000 + seed * 11 + k)
+        programs.append((c.pattern, c.env, min(c.n, 256)))
+
+    return MixedFlushCase(name=f"mixed{seed}", seed=seed,
+                          programs=programs, gathers=gathers, rmws=rmws,
+                          tables=tables, table_ops=table_ops)
+
+
 def generate_case(seed: int) -> FuzzCase:
     """Deterministically generate one legal FuzzCase from ``seed``."""
     g = _Gen(seed)

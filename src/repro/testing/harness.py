@@ -228,19 +228,113 @@ def check_scheduler_parity(cases: Sequence, *, tile_size: int = 1024,
 
 
 def _np_rmw(table: np.ndarray, idx: np.ndarray, vals: np.ndarray,
-            op: str) -> np.ndarray:
+            op: str, cond: np.ndarray | None = None) -> np.ndarray:
     """Sequential per-lane RMW ground truth (mirrors ``OracleEngine``'s
     IRMW loop): naive program order, no sorting, no segment combines.
     Stores drop (the unified OOB policy): out-of-range destinations are
-    skipped."""
+    skipped; ``cond`` False lanes are no-ops."""
     out = np.array(table)
     vals = vals.reshape((idx.shape[0],) + out.shape[1:]).astype(out.dtype)
     for k in range(idx.shape[0]):
         a = int(idx[k])
         if not 0 <= a < out.shape[0]:
             continue
+        if cond is not None and not bool(cond[k]):
+            continue
         out[a:a + 1] = oracle.np_alu(op, out[a:a + 1], vals[k:k + 1])
     return out
+
+
+def check_mixed_flush_parity(case, *, tile_size: int = 256,
+                             scheduler: "Scheduler | None" = None,
+                             tenants: Sequence[str] = ("a", "b", "c"),
+                             rtol: float = 1e-4, atol: float = 1e-5):
+    """Mixed-window parity: programs + raw gathers + RMWs against shared
+    tables in ONE flush, through the full plan pipeline, vs NumPy.
+
+    ``case``: a ``fuzzer.MixedFlushCase`` (or compatible). Expectations
+    mirror the window semantics: gather tickets read the window-initial
+    table state (OOB clamped) — bit-exact; every RMW ticket on a table
+    resolves to the end-of-window state — bit-exact for integer tables
+    (one op per table, order-free mod 2^32), allclose for float ADD; each
+    program matches an independent ``OracleEngine`` run. Returns
+    ``(checked, report)``.
+    """
+    sched = scheduler if scheduler is not None else Scheduler(
+        engine=Engine(tile_size=tile_size, optimize=True))
+    iota = np.arange(tile_size, dtype=np.int32)
+
+    prog_entries, gather_tickets, rmw_tickets = [], [], {}
+    ti = 0
+
+    def tenant():
+        nonlocal ti
+        ti += 1
+        return tenants[ti % len(tenants)]
+
+    # interleave submissions across the three queues and the tenants
+    for p, env, n in case.programs:
+        prog, _ = compiler.compile_pattern(p, tile_size=tile_size)
+        jenv = {k: jnp.asarray(v) for k, v in env.items()}
+        jenv["__iota__"] = jnp.asarray(iota)
+        regs = {"tile_base": 0, "N": n, "tile_end": n}
+        t = sched.submit(prog, jenv, regs, tenant=tenant())
+        prog_entries.append((t, prog, env, regs))
+    for name, idx in case.gathers:
+        t = sched.submit_gather(case.tables[name], idx, tenant=tenant())
+        gather_tickets.append((t, name, idx))
+    for name, idx, vals, cond in case.rmws:
+        t = sched.submit_rmw(case.tables[name], idx, vals,
+                             op=case.table_ops[name], cond=cond,
+                             tenant=tenant())
+        rmw_tickets.setdefault(name, []).append(t)
+
+    report = sched.flush()
+    checked = 0
+
+    # gathers read the window-initial state; loads clamp
+    for t, name, idx in gather_tickets:
+        table = case.tables[name]
+        want = table[np.clip(idx, 0, table.shape[0] - 1)]
+        _assert_match(f"[{case.name} gather {name}] vs NumPy oracle",
+                      sched.result(t), want, rtol=0, atol=0)
+        checked += 1
+
+    # RMW tickets resolve to the end-of-window state (single op per
+    # table, so the sequential submission-order replay is THE answer on
+    # integer tables and allclose on float ADD)
+    for name, tickets in rmw_tickets.items():
+        want = np.array(case.tables[name])
+        for n2, idx, vals, cond in case.rmws:
+            if n2 == name:
+                want = _np_rmw(want, idx, vals, case.table_ops[name],
+                               cond=cond)
+        for t in tickets:
+            _assert_match(f"[{case.name} rmw {name}:"
+                          f"{case.table_ops[name]}] vs NumPy oracle",
+                          sched.result(t), want, rtol=rtol, atol=atol)
+            checked += 1
+
+    # programs: independent per-program ISA-oracle runs
+    for t, prog, env, regs in prog_entries:
+        genv, gspd = sched.result(t)
+        oeng = oracle.OracleEngine(tile_size=tile_size)
+        oenv_in = {k: np.asarray(v) for k, v in env.items()}
+        oenv_in["__iota__"] = np.asarray(iota)
+        oenv, ospd = oeng.run(prog, oenv_in, regs)
+        for name in oenv:
+            if name == "__iota__":
+                continue
+            _assert_match(f"[{case.name} prog {prog.name} env[{name}]] "
+                          "vs ISA oracle", genv[name], oenv[name],
+                          rtol=rtol, atol=atol)
+            checked += 1
+        for name in ospd:
+            _assert_match(f"[{case.name} prog {prog.name} spd[{name}]] "
+                          "vs ISA oracle", gspd[name], ospd[name],
+                          rtol=rtol, atol=atol)
+            checked += 1
+    return checked, report
 
 
 def default_sharded_cases(seed: int = 0, *, n_rows: int = 257,

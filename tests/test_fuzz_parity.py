@@ -11,11 +11,14 @@ import os
 import numpy as np
 import pytest
 
-from repro.core import bulk_gather, bulk_rmw
-from repro.testing import (CONFIG_MATRIX, check_case_parity, generate_case,
-                           rotating_configs)
+from repro.core import Engine, Scheduler, bulk_gather, bulk_rmw
+from repro.plan import CostModel
+from repro.testing import (CONFIG_MATRIX, check_case_parity,
+                           check_mixed_flush_parity, generate_case,
+                           generate_mixed_case, rotating_configs)
 
 N_FUZZ = int(os.environ.get("DX100_FUZZ_N", "200"))
+N_MIXED = 20
 
 
 @pytest.mark.parametrize("seed", range(N_FUZZ))
@@ -23,6 +26,50 @@ def test_fuzz_parity(seed):
     case = generate_case(seed)
     cfgs = rotating_configs(seed, n_eager=1, jit_every=10)
     assert check_case_parity(case, configs=cfgs) > 0
+
+
+@pytest.mark.parametrize("seed", range(N_MIXED))
+def test_mixed_flush_parity(seed):
+    """Mixed windows (programs + raw gathers + RMWs on shared tables in
+    ONE flush) through the full plan pipeline vs the NumPy oracle. The
+    cost model's gather path rotates across the corpus so every backend
+    (chosen, forced-bulk, forced-eager) is exercised."""
+    case = generate_mixed_case(seed)
+    force = (None, "bulk", "eager")[seed % 3]
+    sched = Scheduler(engine=Engine(tile_size=256),
+                      cost_model=CostModel(force_gather=force))
+    checked, report = check_mixed_flush_parity(case, scheduler=sched)
+    assert checked > 0
+    assert report.plan.executed
+
+
+def test_mixed_generator_is_deterministic():
+    a, b = generate_mixed_case(5), generate_mixed_case(5)
+    assert a.table_ops == b.table_ops
+    for k in a.tables:
+        np.testing.assert_array_equal(a.tables[k], b.tables[k])
+    for (n1, i1), (n2, i2) in zip(a.gathers, b.gathers):
+        assert n1 == n2
+        np.testing.assert_array_equal(i1, i2)
+
+
+def test_mixed_corpus_diversity():
+    """The mixed corpus must actually mix: several windows with all three
+    submission kinds, OOB streams, conditional RMWs, float reductions."""
+    kinds3, oob, conds, fdts = 0, 0, 0, 0
+    for seed in range(N_MIXED):
+        c = generate_mixed_case(seed)
+        if c.programs and c.gathers and c.rmws:
+            kinds3 += 1
+        for name, idx in c.gathers:
+            rows = c.tables[name].shape[0]
+            oob += bool(((idx < 0) | (idx >= rows)).any())
+        for _, _, _, cond in c.rmws:
+            conds += cond is not None
+        fdts += any(t.dtype == np.float32
+                    for n, t in c.tables.items() if n.startswith("R"))
+    assert kinds3 == N_MIXED            # every window is genuinely mixed
+    assert oob >= 3 and conds >= 5 and fdts >= 3
 
 
 def test_corpus_covers_the_matrix():

@@ -62,6 +62,74 @@ class TestFlushAsync:
         assert h.poll() is True
         assert h.result().n_programs == 0
 
+    def test_result_is_idempotent(self, rng):
+        """Second result() hands back the materialized report without
+        re-syncing (the leaves are dropped on first materialization)."""
+        sched = Scheduler(engine=Engine(tile_size=TILE))
+        sched.submit_gather(jnp.arange(64.0),
+                            rng.integers(0, 64, size=32, dtype=np.int32))
+        h = sched.flush_async()
+        rep = h.result()
+        assert h._leaves == () and h.done
+        assert h.result() is rep                 # no leaves to block on
+        assert h.poll() is True
+
+    def test_flush_while_inflight_raises(self, rng):
+        """A second flush while the previous async window is unresolved
+        is a clear error — not undefined interleaving — unless the caller
+        opts into overlap (inflight_ok, the decoupled pipeline's mode)."""
+
+        class _InFlight:                         # leaf that never retires
+            def is_ready(self):
+                return False
+
+            def block_until_ready(self):
+                return self
+
+        sched = Scheduler(engine=Engine(tile_size=TILE))
+        t0 = sched.submit_gather(jnp.arange(8.0),
+                                 jnp.asarray([1], jnp.int32))
+        h = sched.flush_async()
+        h._leaves += (_InFlight(),)              # pin the window in flight
+        h._done = False
+        sched.submit_gather(jnp.arange(8.0), jnp.asarray([2], jnp.int32))
+        with pytest.raises(RuntimeError, match="still in flight"):
+            sched.flush_async()
+        with pytest.raises(RuntimeError, match="still in flight"):
+            sched.flush()
+        h2 = sched.flush_async(inflight_ok=True)   # deliberate overlap
+        h2.result()
+        h.result()                               # resolves the pin
+        assert h.done
+        sched.submit_gather(jnp.arange(8.0), jnp.asarray([3], jnp.int32))
+        sched.flush()                            # resolved -> no error
+        np.testing.assert_array_equal(np.asarray(sched.result(t0)), [1.0])
+
+    def test_abandoned_handle_does_not_pin_or_block(self, rng):
+        """The in-flight guard holds the last handle by weakref: a caller
+        that drops an unresolved handle neither pins its window's report/
+        leaves on the scheduler nor blocks future flushes."""
+        sched = Scheduler(engine=Engine(tile_size=TILE))
+        t = sched.submit_gather(jnp.arange(8.0),
+                                jnp.asarray([1], jnp.int32))
+        h = sched.flush_async()
+        ref = weakref.ref(h.report)
+        del h
+        gc.collect()
+        assert ref() is None, "scheduler pinned an abandoned flush window"
+        sched.submit_gather(jnp.arange(8.0), jnp.asarray([2], jnp.int32))
+        sched.flush()                            # guard lifted, no error
+        np.testing.assert_array_equal(np.asarray(sched.result(t)), [1.0])
+
+    def test_polled_to_retirement_allows_next_flush(self, rng):
+        sched = Scheduler(engine=Engine(tile_size=TILE))
+        sched.submit_gather(jnp.arange(8.0), jnp.asarray([1], jnp.int32))
+        h = sched.flush_async()
+        while not h.poll():                      # observe retirement
+            pass
+        sched.submit_gather(jnp.arange(8.0), jnp.asarray([2], jnp.int32))
+        sched.flush()                            # no error, no result() call
+
 
 # ---------------------------------------------------------------------------
 # submit_rmw fast path

@@ -1,0 +1,508 @@
+"""AccessPlan IR tests: pass-by-pass unit tests (passes are pure
+functions on plan trees), explain() golden structure + round-trip (the
+plan reported is the plan executed, by node id and identity), plan-cache
+hit counters across the engine config matrix, and cost-model backend
+choices vs forced-path execution (bit-exact)."""
+import subprocess
+import sys
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import plan
+from repro.core import (Access, Engine, Load, Pattern, Scheduler, Var,
+                        compile_pattern)
+from repro.core.scheduler import Ticket
+from repro.plan import CostModel, LowerContext, nodes, passes
+
+TILE = 256
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(3)
+
+
+def _gather_pattern(name="g"):
+    return Pattern([Access("LD", "A", Load("B", Var("i")), dtype="f32")],
+                   name=name)
+
+
+def _submit_tiled(sched, prog, env, n, tenant="core0"):
+    env = dict(env)
+    env["__iota__"] = np.arange(TILE, dtype=np.int32)
+    return sched.submit(prog, env, {"tile_base": 0, "N": n, "tile_end": n},
+                        tenant=tenant)
+
+
+def _gather_leaf(idx, rows=8, tid=0, table_id=1):
+    table = jnp.arange(float(rows))
+    jidx = jnp.asarray(idx, jnp.int32)
+    return nodes.GatherNode(
+        nid=-1, ticket=Ticket(tid, "a"), table=table, idx=jidx,
+        table_id=table_id, table_ref=None, n_lanes=int(jidx.shape[0]),
+        table_rows=rows)
+
+
+def _ctx(**kw):
+    kw.setdefault("cost", CostModel())
+    return LowerContext(**kw)
+
+
+# ---------------------------------------------------------------------------
+# pass-by-pass: pure functions on plan trees
+# ---------------------------------------------------------------------------
+
+class TestPasses:
+    def test_normalize_assigns_ids_and_clamps(self):
+        leaf = _gather_leaf([-5, 3, 99])
+        p = nodes.Plan(leaves=(leaf,))
+        p2 = passes.normalize(p, _ctx())
+        assert p2.leaves[0].nid == 0
+        np.testing.assert_array_equal(np.asarray(p2.leaves[0].idx),
+                                      [0, 3, 7])          # loads clamp
+        # purity: the input tree is untouched
+        assert leaf.nid == -1
+        np.testing.assert_array_equal(np.asarray(leaf.idx), [-5, 3, 99])
+        assert p2.trace[-1].name == "normalize"
+
+    def test_normalize_casts_rmw_values(self):
+        leaf = nodes.RmwNode(
+            nid=-1, ticket=Ticket(0, "a"), table=jnp.zeros((4, 2)),
+            idx=jnp.asarray([1, 2], jnp.int32),
+            values=jnp.ones((2, 2), jnp.int32), op="ADD",
+            table_id=1, n_lanes=2, table_rows=4)
+        p2 = passes.normalize(nodes.Plan(leaves=(leaf,)), _ctx())
+        assert p2.leaves[0].values.dtype == jnp.zeros((4, 2)).dtype
+        assert p2.leaves[0].values.shape == (2, 2)
+
+    def test_group_partitions_by_signature(self, rng):
+        def prog_leaf(key, tid):
+            return nodes.ProgramNode(nid=-1, ticket=Ticket(tid, "a"),
+                                     program=None, group_key=key)
+        p = nodes.Plan(leaves=(prog_leaf(("k1",), 0), prog_leaf(("k2",), 1),
+                               prog_leaf(("k1",), 2)))
+        ctx = _ctx()
+        p = passes.normalize(p, ctx)
+        p2 = passes.group(p, ctx)
+        assert len(p2.roots) == 2
+        assert [len(g.members) for g in p2.roots] == [2, 1]
+        assert [m.ticket.tid for m in p2.roots[0].members] == [0, 2]
+        assert p.roots == ()                   # purity
+
+    def test_fuse_merges_per_table_and_op(self):
+        g1 = _gather_leaf([1, 2], tid=0, table_id=7)
+        g2 = _gather_leaf([2, 3], tid=1, table_id=7)
+        g3 = _gather_leaf([0], tid=2, table_id=9)
+        r1 = nodes.RmwNode(nid=-1, ticket=Ticket(3, "a"),
+                           table=jnp.zeros(4), idx=jnp.asarray([1], jnp.int32),
+                           values=jnp.ones(1), op="ADD", table_id=5,
+                           n_lanes=1, table_rows=4)
+        r2 = nodes.RmwNode(nid=-1, ticket=Ticket(4, "b"),
+                           table=jnp.zeros(4), idx=jnp.asarray([2], jnp.int32),
+                           values=jnp.ones(1), op="MAX", table_id=5,
+                           n_lanes=1, table_rows=4)
+        ctx = _ctx()
+        p = passes.normalize(nodes.Plan(leaves=(g1, g2, g3, r1, r2)), ctx)
+        p = passes.group(p, ctx)
+        p2 = passes.fuse(p, ctx)
+        kinds = [r.kind for r in p2.roots]
+        assert kinds == ["gather", "gather", "rmw", "rmw"]
+        fg = p2.roots[0]
+        assert fg.table_id == 7 and len(fg.members) == 2
+        assert fg.n_lanes == 4
+        ops = [(r.table_id, r.op) for r in p2.roots[2:]]
+        assert ops == [(5, "ADD"), (5, "MAX")]  # one node per (table, op)
+
+    def test_coalesce_attaches_dedup_for_multi_stream(self):
+        g1 = _gather_leaf([1, 2, 2], tid=0, table_id=7)
+        g2 = _gather_leaf([2, 3], tid=1, table_id=7)
+        ctx = _ctx()
+        p = passes.fuse(passes.group(passes.normalize(
+            nodes.Plan(leaves=(g1, g2)), ctx), ctx), ctx)
+        p2 = passes.coalesce(p, ctx)
+        fg = p2.roots[0]
+        assert fg.backend == ""                    # backend set by shard
+        uniq = np.asarray(fg.unique_idx)
+        assert int(np.asarray(fg.n_unique)) == 3   # {1, 2, 3}
+        for leaf, inv in zip(fg.members, fg.inverses):
+            np.testing.assert_array_equal(uniq[np.asarray(inv)],
+                                          np.asarray(leaf.idx))
+
+    def test_coalesce_lone_duplicate_free_stream_goes_eager(self):
+        p = passes.fuse(passes.group(passes.normalize(
+            nodes.Plan(leaves=(_gather_leaf([0, 1, 2, 3]),)), _ctx()),
+            _ctx()), _ctx())
+        p2 = passes.coalesce(p, _ctx())
+        assert p2.roots[0].backend == "eager"
+        assert p2.roots[0].est_factor == pytest.approx(1.0)
+
+    def test_coalesce_lone_duplicate_heavy_stream_coalesces(self):
+        p = passes.fuse(passes.group(passes.normalize(
+            nodes.Plan(leaves=(_gather_leaf([3] * 64),)), _ctx()), _ctx()),
+            _ctx())
+        p2 = passes.coalesce(p, _ctx())
+        assert p2.roots[0].backend == ""           # worth coalescing
+        assert p2.roots[0].est_factor == pytest.approx(64.0)
+
+    def test_local_shard_pass_sets_bulk(self):
+        ctx = _ctx()
+        p = passes.coalesce(passes.fuse(passes.group(passes.normalize(
+            nodes.Plan(leaves=(_gather_leaf([1, 1, 2], tid=0),
+                               _gather_leaf([2], tid=1))), ctx), ctx),
+            ctx), ctx)
+        p2 = passes.shard_local(p, ctx)
+        assert p2.roots[0].backend == "bulk"
+
+    def test_batch_splits_waves_and_computes_shared(self, rng):
+        sched = Scheduler(engine=Engine(tile_size=TILE), max_batch=2)
+        prog, _ = compile_pattern(_gather_pattern(), tile_size=TILE)
+        A = rng.normal(size=(64,)).astype(np.float32)   # shared table
+        for k in range(5):
+            B = rng.integers(0, 64, size=TILE).astype(np.int32)
+            _submit_tiled(sched, prog, {"A": A, "B": B}, 32)
+        p = sched.explain().plan
+        groups = p.fused("program_group")
+        assert [len(g.members) for g in groups] == [2, 2, 1]
+        assert [g.wave for g in groups] == [0, 1, 2]
+        assert [g.backend for g in groups] == ["vmap", "vmap", "eager"]
+        assert all("A" in g.shared for g in groups if g.backend == "vmap")
+        sched.flush()                                    # leave it clean
+
+
+# ---------------------------------------------------------------------------
+# explain(): golden structure + round-trip
+# ---------------------------------------------------------------------------
+
+class TestExplain:
+    def _mixed_sched(self, rng):
+        sched = Scheduler(engine=Engine(tile_size=TILE))
+        prog, _ = compile_pattern(_gather_pattern(), tile_size=TILE)
+        for t in ("a", "b"):
+            B = rng.integers(0, 64, size=TILE).astype(np.int32)
+            _submit_tiled(sched, prog,
+                          {"A": rng.normal(size=(64,)).astype(np.float32),
+                           "B": B}, 32, tenant=t)
+        table = rng.normal(size=(64,)).astype(np.float32)
+        sched.submit_gather(table, rng.integers(0, 64, size=32,
+                                                dtype=np.int32),
+                            tenant="a")
+        sched.submit_gather(table, rng.integers(0, 64, size=16,
+                                                dtype=np.int32),
+                            tenant="b")
+        sched.submit_rmw(np.zeros(16, np.int32),
+                         rng.integers(0, 16, size=8, dtype=np.int32),
+                         np.ones(8, np.int32), op="ADD", tenant="a")
+        return sched
+
+    def test_golden_structure(self, rng):
+        text = str(self._mixed_sched(rng).explain())
+        # passes render in pipeline order
+        pos = [text.index(f"pass {name}:") for name in passes.PIPELINE]
+        assert pos == sorted(pos)
+        assert "window: 2 programs, 2 gathers, 1 rmws" in text
+        assert "backend=vmap" in text
+        assert "gather#" in text and "backend=bulk" in text
+        assert "rmw#" in text and "op=ADD" in text
+        assert "plan-cache=miss" in text and "executed=no" in text
+
+    def test_round_trip_plan_identity_and_node_ids(self, rng):
+        sched = self._mixed_sched(rng)
+        ex = sched.explain()
+        ids = ex.node_ids
+        assert len(ids) == len(set(ids))        # unique, deterministic
+        rep = sched.flush()
+        assert rep.plan is ex.plan              # the plan executed IS it
+        assert rep.plan.executed
+        assert rep.plan.node_ids() == ids
+        assert "executed=yes" in str(plan.explain(rep))
+
+    def test_explain_of_report_and_handle(self, rng):
+        sched = Scheduler(engine=Engine(tile_size=TILE))
+        sched.submit_gather(jnp.arange(8.0), jnp.asarray([1], jnp.int32))
+        h = sched.flush_async()
+        assert plan.explain(h).plan is h.report.plan
+        h.result()
+
+    def test_report_plan_is_stripped(self, rng):
+        """The executed plan on a long-lived report must not pin tables
+        or index streams (same lifetime rule as the lazy thunks)."""
+        sched = Scheduler(engine=Engine(tile_size=TILE))
+        t = sched.submit_gather(jnp.arange(32.0),
+                                jnp.asarray([3, 3, 1], jnp.int32))
+        rep = sched.flush()
+        sched.result(t)
+        for node in rep.plan.nodes():
+            assert getattr(node, "table", None) is None
+            assert getattr(node, "unique_idx", None) is None
+            assert getattr(node, "streams", ()) == ()
+        str(plan.explain(rep))                  # still renders
+
+    def test_service_explain(self, rng):
+        from repro.serve import AccessService
+        svc = AccessService(tile_size=TILE, auto_flush=0)
+        svc.submit_gather(jnp.arange(16.0), jnp.asarray([3], jnp.int32))
+        assert "gather#" in str(svc.explain())
+        svc.flush()
+
+    def test_core_never_imports_distributed(self):
+        """Emitters are registered, not probed: lowering + executing on a
+        plain Engine must not pull in repro.distributed."""
+        code = ("import sys\n"
+                "import numpy as np, jax.numpy as jnp\n"
+                "from repro.core import Scheduler\n"
+                "s = Scheduler()\n"
+                "t = s.submit_gather(jnp.arange(8.0), "
+                "jnp.asarray([1, 1, 2], jnp.int32))\n"
+                "s.flush(); s.result(t)\n"
+                "assert not any(m.startswith('repro.distributed') "
+                "for m in sys.modules), 'core imported distributed'\n")
+        subprocess.run([sys.executable, "-c", code], check=True)
+
+
+# ---------------------------------------------------------------------------
+# plan cache
+# ---------------------------------------------------------------------------
+
+class TestPlanCache:
+    @pytest.mark.parametrize("optimize", [True, False])
+    @pytest.mark.parametrize("use_kernel", [False, True])
+    def test_repeat_windows_hit_across_engine_matrix(self, rng, optimize,
+                                                     use_kernel):
+        sched = Scheduler(engine=Engine(tile_size=TILE, optimize=optimize,
+                                        use_kernel=use_kernel))
+        prog, _ = compile_pattern(_gather_pattern(), tile_size=TILE)
+        table = rng.normal(size=(64,)).astype(np.float32)
+        for k in range(3):
+            B = rng.integers(0, 64, size=TILE).astype(np.int32)
+            _submit_tiled(sched, prog, {"A": table, "B": B}, 32)
+            _submit_tiled(sched, prog, {"A": table, "B": B + 0}, 32)
+            sched.submit_gather(table, rng.integers(0, 64, size=32,
+                                                    dtype=np.int32))
+            rep = sched.flush()
+            assert rep.plan.cache_hit == (k > 0)
+        assert sched.stats["plan_cache_misses"] == 1
+        assert sched.stats["plan_cache_hits"] == 2
+
+    def test_different_structure_misses(self, rng):
+        sched = Scheduler(engine=Engine(tile_size=TILE))
+        table = rng.normal(size=(64,)).astype(np.float32)
+        sched.submit_gather(table, np.zeros(8, np.int32))
+        sched.flush()
+        sched.submit_gather(table, np.zeros(16, np.int32))   # new shape
+        rep = sched.flush()
+        assert not rep.plan.cache_hit
+        assert sched.stats["plan_cache_misses"] == 2
+
+    def test_hit_replays_recorded_decisions(self, rng):
+        """A cache hit replays the skeleton's path even when fresh
+        measurement would decide differently (decisions are cached, data
+        is recomputed)."""
+        sched = Scheduler(engine=Engine(tile_size=TILE))
+        table = rng.normal(size=(64,)).astype(np.float32)
+        dup = np.full(32, 5, np.int32)                 # factor 32 -> bulk
+        t1 = sched.submit_gather(table, dup)
+        r1 = sched.flush()
+        assert r1.plan.fused("gather")[0].backend == "bulk"
+        fresh = rng.permutation(32).astype(np.int32)   # factor 1 -> eager
+        t2 = sched.submit_gather(table, fresh)
+        r2 = sched.flush()
+        assert r2.plan.cache_hit
+        assert r2.plan.fused("gather")[0].backend == "bulk"  # replayed
+        np.testing.assert_array_equal(np.asarray(sched.result(t1)),
+                                      table[dup])
+        np.testing.assert_array_equal(np.asarray(sched.result(t2)),
+                                      table[fresh])
+
+    def test_empty_windows_do_not_count(self):
+        sched = Scheduler(engine=Engine(tile_size=TILE))
+        sched.flush()
+        sched.flush()
+        assert sched.stats["plan_cache_hits"] == 0
+        assert sched.stats["plan_cache_misses"] == 0
+
+
+# ---------------------------------------------------------------------------
+# cost model: choices vs forced paths, bit-exact
+# ---------------------------------------------------------------------------
+
+class TestCostModelParity:
+    def _streams(self, rng, rows=128):
+        table = rng.normal(size=(rows, 4)).astype(np.float32)
+        streams = [rng.integers(0, rows, size=n).astype(np.int32)
+                   for n in (200, 64, 1)]
+        return table, streams
+
+    def _run(self, table, streams, engine, force=None):
+        sched = Scheduler(engine=engine,
+                          cost_model=CostModel(force_gather=force))
+        tickets = [sched.submit_gather(table, s, tenant=f"c{i}")
+                   for i, s in enumerate(streams)]
+        rep = sched.flush()
+        outs = [np.asarray(sched.result(t)) for t in tickets]
+        return outs, rep
+
+    def test_gather_choice_matches_forced_paths_bit_exact(self, rng):
+        table, streams = self._streams(rng)
+        default, rep = self._run(table, streams, Engine(tile_size=TILE))
+        assert rep.plan.fused("gather")[0].backend == "bulk"  # multi-stream
+        for force in ("eager", "bulk"):
+            forced, frep = self._run(table, streams, Engine(tile_size=TILE),
+                                     force=force)
+            assert frep.plan.fused("gather")[0].backend == force
+            for d, f in zip(default, forced):
+                np.testing.assert_array_equal(d, f)       # bit-exact
+
+    def test_gather_sharded_choice_bit_exact(self, rng):
+        from repro.distributed import ShardedEngine
+        table, streams = self._streams(rng)
+        default, rep = self._run(table, streams, ShardedEngine(mesh=1))
+        assert rep.plan.fused("gather")[0].backend == "sharded"
+        assert rep.shard_stats                            # recorded
+        forced, _ = self._run(table, streams, ShardedEngine(mesh=1),
+                              force="bulk")
+        for d, f in zip(default, forced):
+            np.testing.assert_array_equal(d, f)
+
+    def test_rmw_backends_bit_exact(self, rng):
+        from repro.distributed import ShardedEngine
+        table = rng.integers(0, 2 ** 12, size=64).astype(np.int32)
+        idx = rng.integers(0, 64, size=300).astype(np.int32)
+        vals = rng.integers(0, 2 ** 8, size=300).astype(np.int32)
+        outs = {}
+        for label, engine, force in (
+                ("bulk", Engine(tile_size=TILE), "bulk"),
+                ("sharded", ShardedEngine(mesh=1), "sharded"),
+                ("default", Engine(tile_size=TILE), None)):
+            sched = Scheduler(engine=engine,
+                              cost_model=CostModel(force_rmw=force))
+            t = sched.submit_rmw(table, idx, vals, op="ADD")
+            rep = sched.flush()
+            outs[label] = np.asarray(sched.result(t))
+            want = "sharded" if label == "sharded" else "bulk"
+            assert rep.plan.fused("rmw")[0].backend == want
+        np.testing.assert_array_equal(outs["bulk"], outs["default"])
+        np.testing.assert_array_equal(outs["bulk"], outs["sharded"])
+
+    def test_program_forced_eager_matches_vmap_bit_exact(self, rng):
+        prog, info = compile_pattern(_gather_pattern(), tile_size=TILE)
+        envs = []
+        for _ in range(4):
+            envs.append({"A": rng.normal(size=(64,)).astype(np.float32),
+                         "B": rng.integers(0, 64, size=TILE).astype(
+                             np.int32)})
+        outs = {}
+        for force in (None, "eager"):
+            sched = Scheduler(engine=Engine(tile_size=TILE),
+                              cost_model=CostModel(force_program=force))
+            tickets = [_submit_tiled(sched, prog, env, 32) for env in envs]
+            rep = sched.flush()
+            g = rep.plan.fused("program_group")[0]
+            assert g.backend == ("eager" if force else "vmap")
+            assert rep.groups[0].vmapped == (force is None)
+            outs[force] = [np.asarray(
+                sched.result(t)[1][info["loads"]["A"]]) for t in tickets]
+        for a, b in zip(outs[None], outs["eager"]):
+            np.testing.assert_array_equal(a, b)
+
+    def test_unmeasurable_lone_stream_keeps_coalescing(self, rng):
+        """A stream the cost model cannot measure (here: past the
+        measurement budget; in production: still behind JAX async
+        dispatch) must keep the always-coalesce default — eager is only
+        legal when measurement proves the stream duplication-free."""
+        sched = Scheduler(engine=Engine(tile_size=TILE),
+                          cost_model=CostModel(measure_limit=4))
+        table = rng.normal(size=(64,)).astype(np.float32)
+        t = sched.submit_gather(table, np.full(16, 3, np.int32))
+        rep = sched.flush()
+        g = rep.plan.fused("gather")[0]
+        assert g.backend == "bulk" and g.est_factor is None
+        np.testing.assert_array_equal(np.asarray(sched.result(t)),
+                                      table[np.full(16, 3)])
+
+    def test_invalid_forced_backend_rejected(self):
+        with pytest.raises(ValueError, match="forced backend"):
+            CostModel(force_gather="warp")
+
+
+# ---------------------------------------------------------------------------
+# lowering-time error isolation: a malformed submission fails its own
+# ticket, never the window — and never poisons the scheduler
+# ---------------------------------------------------------------------------
+
+class TestLoweringErrorIsolation:
+    def test_malformed_rmw_fails_only_its_ticket(self, rng):
+        from repro.core import FailedResult
+        sched = Scheduler(engine=Engine(tile_size=TILE))
+        table = rng.normal(size=(64,)).astype(np.float32)
+        idx = rng.integers(0, 64, size=16).astype(np.int32)
+        good_g = sched.submit_gather(table, idx, tenant="nice")
+        bad = sched.submit_rmw(np.zeros(8, np.float32),
+                               np.asarray([0, 1, 2], np.int32),
+                               np.ones(5, np.float32))   # 5 values, 3 idx
+        good_r = sched.submit_rmw(np.zeros(8, np.int32),
+                                  np.asarray([1, 1], np.int32),
+                                  np.ones(2, np.int32), op="ADD")
+        rep = sched.flush()                  # must NOT raise
+        assert isinstance(sched.poll(bad), FailedResult)
+        with pytest.raises(Exception):
+            sched.result(bad)
+        np.testing.assert_array_equal(np.asarray(sched.result(good_g)),
+                                      table[idx])
+        np.testing.assert_array_equal(np.asarray(sched.result(good_r)),
+                                      [0, 2, 0, 0, 0, 0, 0, 0])
+        assert sched.stats["group_errors"] >= 1
+        assert rep.plan.executed
+
+    def test_scheduler_survives_for_later_windows(self, rng):
+        """The reviewer's poisoning reproducer: after a window with a
+        malformed submission, fresh unrelated windows must be healthy."""
+        sched = Scheduler(engine=Engine(tile_size=TILE))
+        sched.submit_rmw(np.zeros(8, np.float32),
+                         np.asarray([0, 1, 2], np.int32),
+                         np.ones(5, np.float32))
+        sched.flush()
+        assert sched.pending == 0            # queues drained
+        t = sched.submit_gather(jnp.arange(8.0),
+                                jnp.asarray([1, 2], jnp.int32))
+        sched.flush()
+        np.testing.assert_array_equal(np.asarray(sched.result(t)),
+                                      [1.0, 2.0])
+
+    def test_mixed_member_payloads_fail_only_that_fusion(self, rng):
+        """Two RMWs on one table whose fused payloads cannot concatenate
+        (1-D vs transposed 2-D values on a 2-D table) fail that (table,
+        op) node; other tables execute."""
+        from repro.core import FailedResult
+        sched = Scheduler(engine=Engine(tile_size=TILE))
+        t2d = np.zeros((8, 3), np.float32)
+        ok = sched.submit_rmw(np.zeros(4, np.int32),
+                              np.asarray([1], np.int32),
+                              np.ones(1, np.int32), op="ADD")
+        b1 = sched.submit_rmw(t2d, np.asarray([0, 1], np.int32),
+                              np.ones((2, 3), np.float32), op="ADD")
+        b2 = sched.submit_rmw(t2d, np.asarray([2], np.int32),
+                              np.ones(2, np.float32), op="ADD")  # bad
+        sched.flush()
+        np.testing.assert_array_equal(np.asarray(sched.result(ok)),
+                                      [0, 1, 0, 0])
+        # the malformed member is failed; the healthy same-table member
+        # either executed or failed with it (fused payload) — but it must
+        # be resolved either way, and the scheduler stays healthy
+        assert sched.poll(b2) is not None
+        assert isinstance(sched.poll(b2), FailedResult)
+        assert sched.poll(b1) is not None
+        sched.submit_gather(jnp.arange(4.0), jnp.asarray([0], jnp.int32))
+        sched.flush()
+
+    def test_explain_shows_error_nodes(self, rng):
+        sched = Scheduler(engine=Engine(tile_size=TILE))
+        sched.submit_rmw(np.zeros(8, np.float32),
+                         np.asarray([0, 1, 2], np.int32),
+                         np.ones(5, np.float32))
+        ex = sched.explain()
+        fused = ex.plan.fused("rmw")
+        assert fused and fused[0].error is not None
+        rep = sched.flush()
+        assert rep.plan is ex.plan
