@@ -22,12 +22,12 @@ from pathlib import Path
 def main() -> None:
     from benchmarks import (common, locality, microbench, pipeline_bench,
                             scheduler_bench, sharded_bench, tilesize,
-                            workloads)
+                            traffic_bench, workloads)
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("only", nargs="?", default=None,
                     choices=("microbench", "locality", "workloads",
                              "tilesize", "scheduler", "sharded",
-                             "pipeline"),
+                             "pipeline", "traffic"),
                     help="run a single module (default: all)")
     ap.add_argument("--json", action="store_true",
                     help="write BENCH_<module>.json in the cwd")
@@ -38,7 +38,8 @@ def main() -> None:
                       ("workloads", workloads), ("tilesize", tilesize),
                       ("scheduler", scheduler_bench),
                       ("sharded", sharded_bench),
-                      ("pipeline", pipeline_bench)):
+                      ("pipeline", pipeline_bench),
+                      ("traffic", traffic_bench)):
         if args.only and args.only != name:
             continue
         print(f"# --- {name} ---", flush=True)

@@ -1,0 +1,101 @@
+"""Open-loop traffic bench: adaptive flush windows vs fixed baselines.
+
+One committed trace (config + digest pinned below) replays through three
+flush controllers on a virtual clock with a *deterministic* service-time
+model (``SERVICE_US = 200 + 8 * depth``), so every row — tail latency
+AND throughput — is machine-independent and bit-reproducible: the gate
+ratios compare exactly across runners.
+
+The serving tension the adaptive controller must win on both ends:
+
+  * fixed-small (threshold 2) flushes eagerly — minimal queueing delay
+    under light load, but during bursts it re-pays the 200us per-flush
+    overhead every 2 requests and the backlog (hence p99) explodes;
+  * fixed-deep (threshold 64) amortizes overhead — fine in bursts, but
+    under light load a window only closes on the max-wait deadline, so
+    every idle-phase request eats ~max_wait_us of latency;
+  * adaptive sizes the window from measured arrival rate, flush
+    overhead, and plan-IR coalescing gain: small windows in idle phases,
+    deep windows in bursts.
+
+Rows (JSON via ``benchmarks.run traffic --json``):
+  traffic_<ctl>_p99            us = that controller's overall p99
+  traffic_p99_adaptive_vs_*    gate_ratio = p99_baseline / p99_adaptive
+  traffic_thr_adaptive_vs_*    gate_ratio = throughput_adaptive / baseline
+All four gate ratios must stay > 1 (adaptive wins) and are regression-
+gated by benchmarks.compare against snapshots/BENCH_traffic.json.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.serve import (AccessService, AdaptiveFlushController,
+                         FixedWindowController, TrafficConfig,
+                         generate_trace, replay_trace)
+
+# the committed trace: regenerate-and-verify, never hand-edit. If the
+# generator changes, re-pin DIGEST and re-baseline BENCH_traffic.json.
+TRACE_CONFIG = TrafficConfig(seed=2028, n_events=1200, n_tenants=2000,
+                             idle_gap_us=150.0, burst_factor=25.0,
+                             mean_phase_events=40, p_program=0.0,
+                             p_tick=0.005)
+DIGEST = "891dd37224095fcf"
+
+MAX_WAIT_US = 2000.0   # same latency deadline for all three controllers
+TILE = 256
+
+
+def service_model(depth, report):
+    """Deterministic per-flush service time (us): fixed dispatch/lowering
+    overhead plus linear drain cost."""
+    return 200.0 + 8.0 * depth
+
+
+def controllers():
+    return (
+        ("adaptive", lambda: AdaptiveFlushController(
+            overhead_us=200.0, max_wait_us=MAX_WAIT_US, max_window=64)),
+        ("fixed_small", lambda: FixedWindowController(
+            2, max_wait_us=MAX_WAIT_US)),
+        ("fixed_deep", lambda: FixedWindowController(
+            64, max_wait_us=MAX_WAIT_US)),
+    )
+
+
+def replay_with(trace, make_ctl):
+    svc = AccessService(tile_size=TILE, auto_flush=0, controller=make_ctl())
+    res = replay_trace(trace, svc, service_time=service_model)
+    s = svc.telemetry.summary()
+    return res, s
+
+
+def run():
+    trace = generate_trace(TRACE_CONFIG)
+    digest = trace.digest()
+    if DIGEST is not None and digest != DIGEST:
+        raise RuntimeError(
+            f"committed traffic trace drifted: digest {digest} != pinned "
+            f"{DIGEST} — the generator changed; re-pin and re-baseline")
+    emit("traffic_trace", 0.0,
+         f"events={len(trace.events)} digest={digest} "
+         f"model=200+8*depth us")
+
+    stats = {}
+    for name, make_ctl in controllers():
+        res, s = replay_with(trace, make_ctl)
+        o, w = s["overall"], s["windows"]
+        stats[name] = (o["p99_us"], o["throughput_per_s"])
+        emit(f"traffic_{name}_p99", o["p99_us"],
+             f"p50={o['p50_us']:.0f}us mean={o['mean_us']:.0f}us "
+             f"thr={o['throughput_per_s']:.0f}/s "
+             f"flushes={w['n_flushes']} mean_depth={w['mean_depth']:.1f}")
+
+    p99_a, thr_a = stats["adaptive"]
+    for base in ("fixed_small", "fixed_deep"):
+        p99_b, thr_b = stats[base]
+        tag = base.split("_")[1]
+        emit(f"traffic_p99_adaptive_vs_{tag}", p99_a,
+             f"gate_ratio={p99_b / p99_a:.2f} "
+             f"(baseline p99 {p99_b:.0f}us)")
+        emit(f"traffic_thr_adaptive_vs_{tag}", 0.0,
+             f"gate_ratio={thr_a / thr_b:.2f} "
+             f"(adaptive {thr_a:.0f}/s vs {thr_b:.0f}/s)")

@@ -25,6 +25,19 @@ def pytest_collection_modifyitems(config, items):
             item.add_marker(skip_slow)
 
 
+@pytest.fixture(autouse=True, scope="module")
+def _bounded_jax_caches():
+    """Drop jit/pjit executable caches at module boundaries. One tier-1
+    process compiles thousands of XLA CPU executables; letting them all
+    accumulate has segfaulted XLA's compiler late in the run (crash point
+    wanders with load — always inside backend_compile). Each module
+    recompiles its warm shapes once; that wall-time cost buys a bounded
+    live-executable set."""
+    import jax
+    jax.clear_caches()
+    yield
+
+
 @pytest.fixture(autouse=True)
 def _deterministic_seeds():
     """Seed the global NumPy / stdlib PRNGs per test. JAX keys are explicit

@@ -62,7 +62,7 @@ def main():
                                table[idx_streams[0]])
     np.testing.assert_allclose(np.asarray(cores[1].wait(t2)),
                                table[idx_streams[1]])
-    print("compile cache:", svc.stats["engine"])
+    print("compile cache:", svc.stats()["engine"])
 
 
 if __name__ == "__main__":

@@ -40,7 +40,7 @@ from __future__ import annotations
 
 import dataclasses
 import weakref
-from collections import OrderedDict, deque
+from collections import OrderedDict
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
@@ -75,6 +75,23 @@ class FailedResult:
     """Stored in place of a result when the owning plan node's execution
     raised; ``Scheduler.result`` re-raises ``error``."""
     error: Exception
+
+
+class QueueFullError(RuntimeError):
+    """Raised by ``Scheduler.result`` for a submission that admission
+    control rejected (the tenant's bounded queue was full at submit)."""
+
+
+@dataclasses.dataclass
+class QueueFull(FailedResult):
+    """Terminal ticket state for a rejected submission.
+
+    Stored at *submit* time — the leaf is never enqueued, so a rejected
+    submission can never reach a flush window or mutate a table. ``poll``
+    returns it (callers branch on ``isinstance``); ``result`` re-raises
+    the carried ``QueueFullError``.
+    """
+    tenant: str = ""
 
 
 @dataclasses.dataclass
@@ -256,10 +273,19 @@ class Scheduler:
         self._lowered: Optional[tuple] = None
         self._plan_cache: "OrderedDict[tuple, plan_passes.Skeleton]" = \
             OrderedDict()
+        # per-tenant serving policy (configure_tenant): SLO weight drives
+        # WFQ drain order, max_pending bounds the tenant's queue share
+        self._tenant_weight: Dict[str, float] = {}
+        self._tenant_cap: Dict[str, int] = {}
+        self._tenant_pending: Dict[str, int] = {}
+        # WFQ virtual time, advanced only across drain-limited windows
+        # (a full drain resets it — nobody is waiting, history is moot)
+        self._vtime: Dict[str, float] = {}
         self.stats = {"flushes": 0, "programs": 0, "gathers": 0,
                       "rmws": 0, "vmap_groups": 0, "vmap_fallbacks": 0,
                       "singleton_groups": 0, "group_errors": 0,
-                      "plan_cache_hits": 0, "plan_cache_misses": 0}
+                      "plan_cache_hits": 0, "plan_cache_misses": 0,
+                      "rejects": 0, "deferrals": 0}
 
     # -- submission ----------------------------------------------------------
 
@@ -273,6 +299,45 @@ class Scheduler:
         self._next_tid += 1
         return t
 
+    def configure_tenant(self, tenant: str, *,
+                         weight: Optional[float] = None,
+                         max_pending: Optional[int] = None) -> None:
+        """Set a tenant's serving policy.
+
+        ``weight``: SLO weight for weighted-fair drain order (default 1.0;
+        higher = served earlier inside a window and a larger share of
+        drain-limited windows). ``max_pending``: bound on the tenant's
+        queued-but-unflushed submissions — submits past it are rejected
+        with a ``QueueFull`` ticket (admission control; None = unbounded).
+        """
+        if weight is not None:
+            if weight <= 0:
+                raise ValueError(f"weight must be > 0, got {weight}")
+            self._tenant_weight[tenant] = float(weight)
+        if max_pending is not None:
+            if max_pending < 0:
+                raise ValueError(
+                    f"max_pending must be >= 0, got {max_pending}")
+            self._tenant_cap[tenant] = int(max_pending)
+
+    def _admit(self, tenant: str) -> Optional[Ticket]:
+        """Admission control: None if the tenant may enqueue, else a
+        ticket already resolved to ``QueueFull`` (nothing was enqueued —
+        a rejected submission can never mutate a table)."""
+        cap = self._tenant_cap.get(tenant)
+        if cap is not None and self._tenant_pending.get(tenant, 0) >= cap:
+            t = self._ticket(tenant)
+            self.stats["rejects"] += 1
+            self._results[t.tid] = QueueFull(
+                QueueFullError(
+                    f"tenant {tenant!r} queue full ({cap} pending): "
+                    "submission rejected by admission control"),
+                tenant=tenant)
+            return t
+        self._tenant_pending[tenant] = \
+            self._tenant_pending.get(tenant, 0) + 1
+        return None
+
     def submit(self, program: isa.AccessProgram, env: Mapping,
                regs: Mapping | None = None, *,
                tenant: str = "core0") -> Ticket:
@@ -282,6 +347,9 @@ class Scheduler:
         registers (``tile_base``/``N``/... — python numbers). Execution is
         deferred to ``flush``.
         """
+        rejected = self._admit(tenant)
+        if rejected is not None:
+            return rejected
         src_refs = tuple(env.values())   # pin caller objects (id stability)
         src_ids = {k: id(v) for k, v in env.items()}
         # keep caller arrays as-is: device transfer happens once, inside the
@@ -305,6 +373,9 @@ class Scheduler:
         or mesh-sharded — the cost model picks); the result for this
         ticket is the (N,)- or (N, D)-shaped gathered array.
         """
+        rejected = self._admit(tenant)
+        if rejected is not None:
+            return rejected
         jtable = jnp.asarray(table)
         # flatten up front: the coalesced fetch always worked on the flat
         # stream (coalesce_streams reshapes), so the eager backend must
@@ -335,6 +406,9 @@ class Scheduler:
         """
         if op not in isa.RMW_OPS:
             raise ValueError(f"op {op!r} not in RMW_OPS {isa.RMW_OPS}")
+        rejected = self._admit(tenant)
+        if rejected is not None:
+            return rejected
         jtable = jnp.asarray(table)
         jidx = jnp.asarray(idx).astype(jnp.int32).reshape(-1)
         leaf = plan_nodes.RmwNode(
@@ -370,36 +444,54 @@ class Scheduler:
 
     # -- fairness ------------------------------------------------------------
 
-    def _fair_order(self, queue: Sequence, cursor: int) -> List:
-        """Round-robin across tenants, FIFO within a tenant.
+    def _wfq_keyed(self, queue: Sequence, cursor: int,
+                   queue_rank: int) -> List[tuple]:
+        """Weighted-fair drain keys for one queue: ``(key, leaf)`` pairs.
 
-        ``cursor`` picks the start tenant; ``flush`` advances it once per
-        flush (not per queue) so a tenant that happens to sort first gets
-        no standing head-of-line advantage.
+        Virtual-finish-time WFQ: tenant ``t``'s ``j``-th queued leaf
+        (FIFO within a tenant) finishes at ``vtime[t] + (j+1)/weight[t]``
+        — a weight-2 tenant lands two leaves per unit of virtual time
+        where a weight-1 tenant lands one. Ties break by the
+        cursor-rotated tenant rank, so with equal weights and idle vtime
+        (the default: all keys ``j+1``) the order is *exactly* the
+        round-robin this replaced: every tenant's j-th leaf, start tenant
+        rotating per flush. ``queue_rank`` orders programs before gathers
+        before RMWs on cross-queue key ties (joint drain-limited
+        selection).
         """
-        by_tenant: "OrderedDict[str, deque]" = OrderedDict()
+        by_tenant: "OrderedDict[str, list]" = OrderedDict()
         for leaf in queue:
-            by_tenant.setdefault(leaf.ticket.tenant, deque()).append(leaf)
+            by_tenant.setdefault(leaf.ticket.tenant, []).append(leaf)
         tenants = list(by_tenant)
         if not tenants:
             return []
         start = cursor % len(tenants)
-        tenants = tenants[start:] + tenants[:start]
-        out = []
-        while by_tenant:
-            for t in list(tenants):
-                q = by_tenant.get(t)
-                if q is None:
-                    continue
-                out.append(q.popleft())
-                if not q:
-                    del by_tenant[t]
-                    tenants.remove(t)
-        return out
+        rank = {t: i for i, t in
+                enumerate(tenants[start:] + tenants[:start])}
+        keyed = []
+        for t, leaves in by_tenant.items():
+            w = self._tenant_weight.get(t, 1.0)
+            base = self._vtime.get(t, 0.0)
+            for j, leaf in enumerate(leaves):
+                keyed.append(((base + (j + 1) / w, rank[t], j, queue_rank),
+                              leaf))
+        return keyed
+
+    def _fair_order(self, queue: Sequence, cursor: int) -> List:
+        """Weighted-fair order across tenants, FIFO within a tenant
+        (plain rotated round-robin when every weight is the default 1.0).
+        ``cursor`` picks the start tenant; ``flush`` advances it once per
+        flush (not per queue) so a tenant that happens to sort first gets
+        no standing head-of-line advantage.
+        """
+        keyed = self._wfq_keyed(queue, cursor, 0)
+        keyed.sort(key=lambda e: e[0])
+        return [leaf for _, leaf in keyed]
 
     # -- lowering (submission leaves -> AccessPlan) --------------------------
 
-    def _lower_pending(self) -> plan_nodes.Plan:
+    def _lower_pending(self, drain_limit: Optional[int] = None) \
+            -> plan_nodes.Plan:
         """Lower the pending queues through the plan pass pipeline.
 
         The lowering is cached against the exact queue contents (and
@@ -407,17 +499,41 @@ class Scheduler:
         lowers once and executes the very plan it reported. Lowering
         *decisions* additionally hit the structural plan cache
         (``window_signature`` -> ``Skeleton``) across windows.
+
+        ``drain_limit`` caps the window: the limit leaves with the
+        smallest WFQ keys — selected jointly across all three queues —
+        form the window; the rest stay queued (FIFO preserved) for the
+        next flush. The deferred remainder rides with the cached lowering
+        so ``flush_async`` drains exactly what was lowered.
         """
         fingerprint = (tuple(id(leaf) for leaf in self._queue),
                        tuple(id(leaf) for leaf in self._gather_queue),
                        tuple(id(leaf) for leaf in self._rmw_queue),
-                       self._rr_cursor)
+                       self._rr_cursor, drain_limit)
         if self._lowered is not None and self._lowered[0] == fingerprint:
             return self._lowered[1]
         cursor = self._rr_cursor
-        leaves = (tuple(self._fair_order(self._queue, cursor))
-                  + tuple(self._fair_order(self._gather_queue, cursor))
-                  + tuple(self._fair_order(self._rmw_queue, cursor)))
+        queues = (self._queue, self._gather_queue, self._rmw_queue)
+        deferred = None
+        if drain_limit is not None and 0 <= drain_limit < self.pending:
+            keyed = []
+            for qi, q in enumerate(queues):
+                keyed.extend(self._wfq_keyed(q, cursor, qi))
+            keyed.sort(key=lambda e: e[0])
+            take = {id(leaf) for _, leaf in keyed[:drain_limit]}
+            # window keeps kind blocks (programs, gathers, RMWs) with the
+            # selected leaves in WFQ order inside each block
+            leaves = tuple(
+                leaf for qi in range(3)
+                for _, leaf in sorted(
+                    (e for e in keyed if id(e[1]) in take
+                     and e[0][3] == qi), key=lambda e: e[0]))
+            deferred = tuple([leaf for leaf in q if id(leaf) not in take]
+                             for q in queues)
+        else:
+            leaves = (tuple(self._fair_order(self._queue, cursor))
+                      + tuple(self._fair_order(self._gather_queue, cursor))
+                      + tuple(self._fair_order(self._rmw_queue, cursor)))
         order = tuple((leaf.ticket.tenant, leaf.ticket.tid)
                       for leaf in leaves)
         backend = plan_emit.backend_for(self.engine)
@@ -442,7 +558,7 @@ class Scheduler:
             self._plan_cache[signature] = plan_passes.skeleton_of(plan)
             while len(self._plan_cache) > PLAN_CACHE_SIZE:
                 self._plan_cache.popitem(last=False)
-        self._lowered = (fingerprint, plan)
+        self._lowered = (fingerprint, plan, deferred)
         return plan
 
     def explain(self) -> Explanation:
@@ -456,7 +572,8 @@ class Scheduler:
 
     # -- execution -----------------------------------------------------------
 
-    def flush(self, *, inflight_ok: bool = False) -> FlushReport:
+    def flush(self, *, inflight_ok: bool = False,
+              drain_limit: Optional[int] = None) -> FlushReport:
         """Blocking flush: dispatch the window and wait for retirement.
 
         A thin wrapper over ``flush_async`` — the decoupled access/execute
@@ -464,9 +581,11 @@ class Scheduler:
         iteration k+1's access window can dispatch while iteration k's
         compute is still in flight.
         """
-        return self.flush_async(inflight_ok=inflight_ok).result()
+        return self.flush_async(inflight_ok=inflight_ok,
+                                drain_limit=drain_limit).result()
 
-    def flush_async(self, *, inflight_ok: bool = False) -> FlushHandle:
+    def flush_async(self, *, inflight_ok: bool = False,
+                    drain_limit: Optional[int] = None) -> FlushHandle:
         """Drain the queues: lower to a plan, emit every node, retire.
 
         Non-blocking: every node is *dispatched* (JAX async dispatch — the
@@ -482,6 +601,11 @@ class Scheduler:
         ``inflight_ok=True`` — multi-window overlap is exactly what the
         decoupled pipeline does deliberately, and what an unmanaged caller
         gets by accident.
+
+        ``drain_limit`` bounds the window to the limit leaves with the
+        smallest WFQ keys (per-tenant SLO weights, ``configure_tenant``);
+        deferred leaves stay queued and their tenants' virtual times
+        advance so the next window carries the fairness debt forward.
         """
         prev = self._inflight() if self._inflight is not None else None
         if prev is not None and not prev.done and not inflight_ok:
@@ -492,7 +616,7 @@ class Scheduler:
                 "windows deliberately (what repro.pipeline.DecoupledLoop "
                 "does)")
         try:
-            plan = self._lower_pending()
+            plan = self._lower_pending(drain_limit)
         except Exception as e:
             # last resort: per-leaf/per-node isolation lives in the
             # passes, but an unforeseen lowering failure must still fail
@@ -502,6 +626,8 @@ class Scheduler:
             pending = (self._queue + self._gather_queue + self._rmw_queue)
             self._queue, self._gather_queue, self._rmw_queue = [], [], []
             self._lowered = None
+            self._tenant_pending.clear()
+            self._vtime.clear()
             self._rr_cursor += 1
             self.stats["flushes"] += 1
             self.stats["group_errors"] += 1
@@ -515,7 +641,27 @@ class Scheduler:
             handle = FlushHandle(report, ())
             self._inflight = weakref.ref(handle)
             return handle
-        self._queue, self._gather_queue, self._rmw_queue = [], [], []
+        deferred = self._lowered[2] if self._lowered is not None else None
+        if deferred is None:
+            self._queue, self._gather_queue, self._rmw_queue = [], [], []
+            self._vtime.clear()              # full drain: no fairness debt
+            self._tenant_pending.clear()
+        else:
+            # drain-limited window: deferred leaves stay queued (FIFO);
+            # drained tenants' virtual time advances by served/weight so
+            # the next window's WFQ keys carry the debt forward
+            self._queue, self._gather_queue, self._rmw_queue = \
+                (list(q) for q in deferred)
+            self.stats["deferrals"] += sum(len(q) for q in deferred)
+            for tenant, _ in plan.order:
+                w = self._tenant_weight.get(tenant, 1.0)
+                self._vtime[tenant] = self._vtime.get(tenant, 0.0) + 1.0 / w
+            self._tenant_pending.clear()
+            for q in (self._queue, self._gather_queue, self._rmw_queue):
+                for leaf in q:
+                    t = leaf.ticket.tenant
+                    self._tenant_pending[t] = \
+                        self._tenant_pending.get(t, 0) + 1
         self._lowered = None
         self._rr_cursor += 1                 # once per flush, not per queue
 
@@ -611,18 +757,56 @@ class Scheduler:
             for m, stream in zip(node.members, node.streams):
                 self._results[m.ticket.tid] = node.table[stream]
             return
-        packed = node.table[node.unique_idx]   # single fused fetch
+        uniq = np.asarray(node.unique_idx)
+        cap = _bucket_pow2(uniq.shape[0])
+        if cap > uniq.shape[0]:
+            # pad the fetch to the bucket with row 0 (in-range, so loads
+            # clamp semantics are untouched); inverses never point at pads
+            uniq = np.concatenate(
+                [uniq, np.zeros(cap - uniq.shape[0], uniq.dtype)])
+        packed = node.table[uniq]              # single fused fetch
         for m, inv in zip(node.members, node.inverses):
             self._results[m.ticket.tid] = packed[inv]
 
     def _execute_rmws(self, node: plan_nodes.FusedRmw,
                       ctx: plan_emit.EmitContext) -> None:
         table = ctx.tables.get(node.table_id, node.table)
-        new = bulk_ops.bulk_rmw(table, node.idx, node.values, op=node.op,
-                                cond=node.cond,
+        idx = np.asarray(node.idx).reshape(-1)
+        vals, cond = node.values, node.cond
+        cap = _bucket_pow2(idx.shape[0]) if idx.shape[0] else 0
+        if cap > idx.shape[0]:
+            # pad to the bucket with past-the-end destinations: the OOB
+            # store policy (stores drop) discards them on every path, so
+            # padded lanes are no-ops regardless of value
+            pad = cap - idx.shape[0]
+            vals = np.asarray(vals).reshape((idx.shape[0],) +
+                                            np.shape(table)[1:])
+            idx = np.concatenate(
+                [idx, np.full(pad, np.shape(table)[0], idx.dtype)])
+            vals = np.concatenate(
+                [vals, np.zeros((pad,) + vals.shape[1:], vals.dtype)])
+            if cond is not None:
+                cond = np.concatenate(
+                    [np.asarray(cond).reshape(-1).astype(bool),
+                     np.zeros(pad, bool)])
+        new = bulk_ops.bulk_rmw(table, idx, vals, op=node.op,
+                                cond=cond,
                                 optimize=self.engine.optimize)
         ctx.tables[node.table_id] = new
         ctx.rmw_members.setdefault(node.table_id, []).extend(node.members)
+
+
+def _bucket_pow2(n: int) -> int:
+    """Smallest power of two >= n, floored at 16.
+
+    Fused stream lengths vary with window composition, and every distinct
+    length is a fresh XLA compile of the fetch/RMW executable — under
+    open-loop traffic with adaptive windows that is an unbounded compile
+    stream (and enough accumulated CPU executables eventually crash the
+    XLA compiler). Bucketing caps shape diversity at O(log max_len)
+    executables per table shape; padded lanes are provable no-ops (row-0
+    fetches nothing new, past-the-end stores drop)."""
+    return max(16, 1 << int(n - 1).bit_length())
 
 
 # ---------------------------------------------------------------------------

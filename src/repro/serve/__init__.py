@@ -1,3 +1,10 @@
-from repro.serve.access_service import AccessService, CoreClient  # noqa: F401
+from repro.serve.access_service import (AccessService,  # noqa: F401
+                                        AdaptiveFlushController,
+                                        CoreClient, FixedWindowController,
+                                        FlushController, plan_gain)
 from repro.serve.kv_cache import PagedKVCache  # noqa: F401
 from repro.serve.serve import ServeLoop  # noqa: F401
+from repro.serve.telemetry import Telemetry, TenantStats  # noqa: F401
+from repro.serve.traffic import (ReplayResult, Trace,  # noqa: F401
+                                 TrafficConfig, TrafficEvent,
+                                 generate_trace, replay_trace)

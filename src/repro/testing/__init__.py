@@ -13,7 +13,8 @@ Quick parity check for any Pattern (the one-liner future refactors use):
 from repro.testing.conformance import all_names as conformance_names
 from repro.testing.conformance import build as build_conformance
 from repro.testing.fuzzer import (FuzzCase, MixedFlushCase, generate_case,
-                                  generate_mixed_case)
+                                  generate_mixed_case,
+                                  generate_traffic_case)
 from repro.testing.harness import (CONFIG_MATRIX, EAGER_CONFIGS,
                                    JIT_CONFIGS, EngineConfig, ParityError,
                                    check_app_parity, check_case_parity,
@@ -21,6 +22,7 @@ from repro.testing.harness import (CONFIG_MATRIX, EAGER_CONFIGS,
                                    check_pattern_parity,
                                    check_scheduler_parity,
                                    check_sharded_parity,
+                                   check_traffic_parity,
                                    default_sharded_cases,
                                    rotating_configs, run_engine_tiled)
 from repro.testing.oracle import (NP_DTYPES, OracleEngine, eval_expr,
@@ -29,6 +31,7 @@ from repro.testing.oracle import (NP_DTYPES, OracleEngine, eval_expr,
 __all__ = [
     "conformance_names", "build_conformance", "FuzzCase", "generate_case",
     "MixedFlushCase", "generate_mixed_case", "check_mixed_flush_parity",
+    "generate_traffic_case", "check_traffic_parity",
     "CONFIG_MATRIX", "EAGER_CONFIGS", "JIT_CONFIGS", "EngineConfig",
     "ParityError", "check_app_parity", "check_case_parity",
     "check_pattern_parity",

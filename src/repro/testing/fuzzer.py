@@ -356,3 +356,30 @@ def generate_case(seed: int) -> FuzzCase:
     compiler.check_legality(pattern)    # by construction; fail loudly if not
     return FuzzCase(name=f"fuzz{seed}", pattern=pattern, env=g.env,
                     n=g.n, seed=seed)
+
+
+def generate_traffic_case(seed: int):
+    """Seeded open-loop traffic trace (``serve.traffic.Trace``) for the
+    differential corpus: arrival-timed mixed submissions whose burst
+    shape, tenant skew, event mix, and tick density vary across seeds —
+    the adaptive flush controller gets exercised across burst/idle phase
+    boundaries, and high-``p_tick`` seeds produce deadline pops on an
+    already-drained queue (the empty-window flush). Deterministic per
+    seed; replay + oracle live in ``harness.check_traffic_parity``.
+    """
+    from repro.serve.traffic import TrafficConfig, generate_trace
+    rng = np.random.default_rng(0xD1_07AF + seed)
+    cfg = TrafficConfig(
+        seed=seed,
+        n_events=int(rng.choice((120, 200, 320))),
+        n_tenants=int(rng.choice((40, 400, 2000))),
+        zipf_tenant=float(rng.choice((1.05, 1.2, 1.5))),
+        idle_gap_us=float(rng.choice((200.0, 500.0, 1000.0))),
+        burst_factor=float(rng.choice((20.0, 100.0, 400.0))),
+        mean_phase_events=int(rng.choice((25, 60, 120))),
+        p_rmw=float(rng.choice((0.2, 0.35))),
+        p_program=float(rng.choice((0.0, 0.05))),
+        p_tick=float(rng.choice((0.01, 0.08))),
+        p_cond=float(rng.choice((0.0, 0.3))),
+    )
+    return generate_trace(cfg)

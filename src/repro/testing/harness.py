@@ -20,7 +20,7 @@ name — the one-line reproducer for future perf/refactor PRs.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Mapping, Sequence
+from typing import Dict, Mapping, Optional, Sequence
 
 import numpy as np
 import jax.numpy as jnp
@@ -526,3 +526,115 @@ def rotating_configs(seed: int, *, n_eager: int = 2,
             seen.add(c)
             out.append(c)
     return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# open-loop traffic replay parity
+# ---------------------------------------------------------------------------
+
+def check_traffic_parity(trace, service=None, *,
+                         tile_size: Optional[int] = None,
+                         service_time=None, rtol: float = 1e-4,
+                         atol: float = 1e-5):
+    """Replay an open-loop trace through a service and assert every
+    ticket bit-exact vs the NumPy oracle — adaptive window sizing and WFQ
+    must change *when* work runs, never *what* it computes.
+
+    Expectations per kind (the mixed-window semantics, applied to
+    whatever windows the controller happened to cut):
+
+      * gather — the submit-time table snapshot, OOB clamped: bit-exact;
+      * RMW — the end state of *the window that drained the ticket*
+        (membership recovered from each ``FlushReport.order``), replayed
+        sequentially by ``_np_rmw`` from the original table: bit-exact on
+        integer tables (the trace default), allclose on float ADD;
+      * program — an independent ``OracleEngine`` run of the same
+        compiled program (cached per program shape), to the harness's
+        standard float tolerance;
+      * rejected (``QueueFull``) — ``result()`` raises
+        ``QueueFullError``; nothing was enqueued, so no table state to
+        check.
+
+    Returns ``(checked, ReplayResult)``.
+    """
+    from repro.core.scheduler import QueueFullError
+    from repro.serve.access_service import (AccessService,
+                                            AdaptiveFlushController)
+    from repro.serve.traffic import replay_trace
+
+    if service is None:
+        service = AccessService(
+            tile_size=tile_size or 256, auto_flush=0,
+            controller=AdaptiveFlushController(overhead_us=200.0))
+    if tile_size is None:
+        # programs must compile at the engine's own tile so the oracle's
+        # scratchpad shapes agree with what the service executed
+        tile_size = service.scheduler.engine.tile_size
+    if service_time is None:
+        # deterministic service model: fixed overhead + linear drain cost
+        def service_time(depth, report):
+            return 200.0 + 8.0 * depth
+    res = replay_trace(trace, service, service_time=service_time,
+                       tile_size=tile_size)
+    sched = service.scheduler
+    win_of = res.window_of()
+
+    # RMW oracle: per (window, table), sequential submission-order replay
+    # from the original table (single op per table -> order-free)
+    rmw_events: Dict[tuple, list] = {}
+    for ev, t in res.tickets:
+        if ev.kind == "rmw":
+            rmw_events.setdefault((win_of[t.tid], ev.table), []).append(ev)
+    end_state = {}
+    for (wi, name), evs in rmw_events.items():
+        want = np.array(trace.tables[name])
+        for ev in evs:
+            want = _np_rmw(want, ev.idx, ev.values, ev.op, cond=ev.cond)
+        end_state[(wi, name)] = want
+
+    oracle_cache: Dict[int, tuple] = {}
+    checked = 0
+    for ev, t in res.tickets:
+        got = sched.result(t)
+        where = f"[traffic {ev.kind} @{ev.t_us:.0f}us tenant={ev.tenant}]"
+        if ev.kind == "gather":
+            table = trace.tables[ev.table]
+            want = table[np.clip(ev.idx, 0, table.shape[0] - 1)]
+            _assert_match(f"{where} {ev.table} vs NumPy oracle", got, want,
+                          rtol=0, atol=0)
+        elif ev.kind == "rmw":
+            want = end_state[(win_of[t.tid], ev.table)]
+            exact = trace.tables[ev.table].dtype != np.float32
+            _assert_match(f"{where} {ev.table}:{ev.op} vs NumPy oracle",
+                          got, want, rtol=0 if exact else rtol,
+                          atol=0 if exact else atol)
+        else:   # program
+            genv, gspd = got
+            if ev.program_id not in oracle_cache:
+                pattern, env, n = trace.programs[ev.program_id]
+                prog, _ = compiler.compile_pattern(pattern,
+                                                   tile_size=tile_size)
+                oeng = oracle.OracleEngine(tile_size=tile_size)
+                oenv_in = {k: np.asarray(v) for k, v in env.items()}
+                oenv_in["__iota__"] = np.arange(tile_size, dtype=np.int32)
+                oracle_cache[ev.program_id] = oeng.run(
+                    prog, oenv_in, {"tile_base": 0, "N": n, "tile_end": n})
+            oenv, ospd = oracle_cache[ev.program_id]
+            for name in oenv:
+                if name == "__iota__":
+                    continue
+                _assert_match(f"{where} prog env[{name}] vs ISA oracle",
+                              genv[name], oenv[name], rtol=rtol, atol=atol)
+            for name in ospd:
+                _assert_match(f"{where} prog spd[{name}] vs ISA oracle",
+                              gspd[name], ospd[name], rtol=rtol, atol=atol)
+        checked += 1
+
+    for ev, t in res.rejected:
+        try:
+            sched.result(t)
+        except QueueFullError:
+            continue
+        raise ParityError(f"rejected ticket {t} did not raise "
+                          "QueueFullError from result()")
+    return checked, res

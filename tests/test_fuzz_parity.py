@@ -19,6 +19,7 @@ from repro.testing import (CONFIG_MATRIX, check_case_parity,
 
 N_FUZZ = int(os.environ.get("DX100_FUZZ_N", "200"))
 N_MIXED = 20
+N_TRAFFIC = int(os.environ.get("DX100_TRAFFIC_N", "20"))
 
 
 @pytest.mark.parametrize("seed", range(N_FUZZ))
@@ -128,6 +129,114 @@ def test_fuzz_full_matrix(seed):
     """Exhaustive: one seed against all 24 configs (jit compiles included)."""
     case = generate_case(seed)
     check_case_parity(case, configs=CONFIG_MATRIX)
+
+
+# ---------------------------------------------------------------------------
+# fuzzed open-loop traffic traces (ISSUE #6): every trace replays through
+# the serving layer bit-exactly however the controller windows it; the
+# controller and serving policy rotate across the corpus so adaptive
+# sizing, fixed thresholds, drain-limited WFQ, and admission pressure are
+# all exercised.
+# ---------------------------------------------------------------------------
+
+_TRAFFIC_ENGINE = []     # one shared Engine: executables are reused
+#                          across the corpus instead of piling up per case
+
+
+def _traffic_scheduler():
+    if not _TRAFFIC_ENGINE:
+        _TRAFFIC_ENGINE.append(Engine(tile_size=256))
+    return Scheduler(engine=_TRAFFIC_ENGINE[0])
+
+
+def _corpus_service(seed):
+    from repro.serve import (AccessService, AdaptiveFlushController,
+                             FixedWindowController)
+    kind = seed % 4
+    if kind == 0:
+        ctl = AdaptiveFlushController(overhead_us=200.0)
+    elif kind == 1:
+        ctl = FixedWindowController(2)                    # fixed-small
+    elif kind == 2:
+        ctl = FixedWindowController(16, drain_cap=6)      # deep + WFQ drain
+    else:
+        ctl = AdaptiveFlushController(overhead_us=200.0, drain_cap=8)
+    return AccessService(_traffic_scheduler(), auto_flush=0,
+                         controller=ctl), kind
+
+
+@pytest.mark.parametrize("seed", range(N_TRAFFIC))
+def test_traffic_replay_parity(seed):
+    from repro.testing import check_traffic_parity, generate_traffic_case
+    trace = generate_traffic_case(seed)
+    svc, kind = _corpus_service(seed)
+    if kind == 3:
+        # admission pressure: cap + upweight the trace's hottest tenants
+        counts = {}
+        for e in trace.events:
+            counts[e.tenant] = counts.get(e.tenant, 0) + 1
+        hot = sorted(counts, key=counts.get, reverse=True)[:2]
+        svc.connect(hot[0], weight=4.0, max_pending=4)
+        if len(hot) > 1:
+            svc.connect(hot[1], weight=0.5, max_pending=2)
+    checked, res = check_traffic_parity(trace, svc)
+    assert checked > 0
+    assert res.n_flushes > 1
+
+
+def test_traffic_generator_is_deterministic():
+    from repro.testing import generate_traffic_case
+    a, b = generate_traffic_case(9), generate_traffic_case(9)
+    assert a.digest() == b.digest()
+    assert a.config == b.config
+
+
+def test_traffic_corpus_diversity():
+    """The corpus must span the open-loop space it claims to: bursty and
+    idle phases, explicit tick events, program submissions, OOB-poisoned
+    streams, conditional RMWs, thousands-of-tenants zipf tails."""
+    from repro.testing import generate_traffic_case
+    ticks = programs = oob = conds = bursts = idles = 0
+    max_tenants = 0
+    for seed in range(N_TRAFFIC):
+        tr = generate_traffic_case(seed)
+        max_tenants = max(max_tenants, tr.config.n_tenants)
+        gaps = np.diff([e.t_us for e in tr.events])
+        bursts += bool((gaps < tr.config.idle_gap_us / 10).sum() > 10)
+        idles += bool((gaps > tr.config.idle_gap_us / 2).sum() > 10)
+        for e in tr.events:
+            ticks += e.kind == "tick"
+            programs += e.kind == "program"
+            if e.idx is not None:
+                rows = tr.tables[e.table].shape[0]
+                oob += bool(((e.idx < 0) | (e.idx >= rows)).any())
+            conds += e.kind == "rmw" and e.cond is not None
+    assert ticks >= 5 and programs >= 5
+    assert oob >= 10 and conds >= 10
+    assert bursts >= N_TRAFFIC // 2 and idles >= N_TRAFFIC // 2
+    assert max_tenants >= 2000
+
+
+def test_traffic_corpus_hits_empty_window_and_rejects():
+    """The two awkward serving edges must actually occur in-corpus: a
+    deadline/tick flush finding an empty queue (must be a harmless no-op)
+    and admission-control rejections under a tenant cap."""
+    from repro.serve import AccessService, AdaptiveFlushController
+    from repro.testing import check_traffic_parity, generate_traffic_case
+    trace = generate_traffic_case(0)
+    svc = AccessService(_traffic_scheduler(), auto_flush=0,
+                        controller=AdaptiveFlushController(
+                            overhead_us=200.0))
+    counts = {}
+    for e in trace.events:
+        counts[e.tenant] = counts.get(e.tenant, 0) + 1
+    hot = max(counts, key=counts.get)
+    svc.connect(hot, max_pending=2)
+    checked, res = check_traffic_parity(trace, svc)
+    assert checked > 0
+    assert any(len(rep.order) == 0 for _, rep in res.windows)
+    assert len(res.rejected) > 0
+    assert svc.stats()["rejects"] == len(res.rejected)
 
 
 # ---------------------------------------------------------------------------

@@ -424,7 +424,7 @@ class TestAccessService:
         _, spd = core.wait(t)
         np.testing.assert_allclose(
             np.asarray(spd[info["loads"]["A"]]), env["A"][env["B"]])
-        assert svc.stats["engine"]["trace_misses"] == 1
+        assert svc.stats()["engine"]["trace_misses"] == 1
         # the wait-triggered flush must be visible in last_report
         assert svc.last_report is not None
         assert svc.last_report.n_programs == 1

@@ -1,0 +1,433 @@
+"""Open-loop traffic serving: generator determinism, replay parity vs the
+NumPy oracle, adaptive flush-window controllers, WFQ + admission control
+through the service, telemetry, and the auto-flush/DecoupledLoop
+regression.
+
+The core invariant (ISSUE #6): window sizing and weighted-fair queueing
+decide *when* work runs, never *what* it computes — every replayed
+ticket must match the oracle bit-exactly however the controller cuts the
+trace into windows. Mesh variants re-run the same replay on a sharded
+engine (skipped below 4 visible devices; CI's sharded/traffic jobs force
+8 host devices via XLA_FLAGS).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.scheduler import QueueFull, QueueFullError
+from repro.pipeline import DecoupledLoop
+from repro.serve import (AccessService, AdaptiveFlushController,
+                         FixedWindowController, Telemetry, Trace,
+                         TrafficConfig, generate_trace)
+from repro.testing import check_traffic_parity, generate_traffic_case
+
+N_DEV = len(jax.devices())
+TILE = 256
+
+_ENGINE = []     # one shared single-device Engine for the whole module:
+#                  services get fresh Schedulers (queue state) but reuse
+#                  compiled executables instead of piling them up per test
+
+
+def _scheduler():
+    from repro.core import Engine, Scheduler
+    if not _ENGINE:
+        _ENGINE.append(Engine(tile_size=TILE))
+    return Scheduler(engine=_ENGINE[0])
+
+
+def adaptive_service(**kw):
+    return AccessService(_scheduler(), auto_flush=0,
+                         controller=AdaptiveFlushController(
+                             overhead_us=200.0, **kw))
+
+
+# ---------------------------------------------------------------------------
+# generator
+# ---------------------------------------------------------------------------
+
+class TestGenerator:
+    def test_deterministic(self):
+        a = generate_traffic_case(7)
+        b = generate_traffic_case(7)
+        assert a.digest() == b.digest()
+        assert len(a.events) == len(b.events)
+        for e1, e2 in zip(a.events, b.events):
+            assert (e1.t_us, e1.kind, e1.tenant, e1.table) == \
+                (e2.t_us, e2.kind, e2.tenant, e2.table)
+
+    def test_arrivals_monotone_and_bursty(self):
+        cfg = TrafficConfig(seed=3, n_events=800, idle_gap_us=500.0,
+                            burst_factor=100.0)
+        tr = generate_trace(cfg)
+        ts = np.array([e.t_us for e in tr.events])
+        assert (np.diff(ts) >= 0).all()
+        gaps = np.diff(ts)
+        # bimodal: burst gaps an order of magnitude under idle gaps
+        assert (gaps < cfg.idle_gap_us / 10).sum() > 50
+        assert (gaps > cfg.idle_gap_us / 2).sum() > 50
+
+    def test_zipf_tenant_skew(self):
+        tr = generate_trace(TrafficConfig(seed=0, n_events=1500,
+                                          n_tenants=2000))
+        counts = {}
+        for e in tr.events:
+            counts[e.tenant] = counts.get(e.tenant, 0) + 1
+        top = sorted(counts.values(), reverse=True)
+        # zipf-skewed: the hot tenant dominates, yet the tail is wide
+        assert top[0] > 20 * top[len(top) // 2]
+        assert len(counts) > 100
+
+    def test_rmw_tables_single_op_and_disjoint(self):
+        tr = generate_traffic_case(1)
+        for e in tr.events:
+            if e.kind == "rmw":
+                assert e.table.startswith("R")
+                assert e.op == tr.table_ops[e.table]
+            elif e.kind == "gather":
+                assert e.table.startswith("G")
+
+    def test_json_round_trip_and_digest_pinning(self):
+        tr = generate_trace(TrafficConfig(seed=5, n_events=100))
+        doc = tr.to_json()
+        tr2 = Trace.from_json(doc)
+        assert tr2.digest() == tr.digest()
+        bad = doc.replace(tr.digest(), "0" * 16)
+        with pytest.raises(ValueError, match="digest mismatch"):
+            Trace.from_json(bad)
+
+
+# ---------------------------------------------------------------------------
+# replay parity (the satellite's core assertion)
+# ---------------------------------------------------------------------------
+
+class TestReplayParity:
+    @pytest.mark.parametrize("seed", [0, 3])
+    def test_adaptive_windows_bit_exact(self, seed):
+        trace = generate_traffic_case(seed)
+        checked, res = check_traffic_parity(trace,
+                                            adaptive_service())
+        assert checked > 0
+        assert res.n_flushes > 1                  # actually windowed
+
+    def test_fixed_window_drain_limited_bit_exact(self):
+        trace = generate_traffic_case(2)
+        svc = AccessService(_scheduler(), auto_flush=0,
+                            controller=FixedWindowController(
+                                6, drain_cap=4))
+        checked, res = check_traffic_parity(trace, svc)
+        assert checked > 0
+        # drain cap actually deferred leaves across windows
+        assert svc.scheduler.stats["deferrals"] > 0
+
+    def test_weights_and_caps_bit_exact(self):
+        trace = generate_traffic_case(4)
+        svc = adaptive_service()
+        counts = {}
+        for e in trace.events:
+            counts[e.tenant] = counts.get(e.tenant, 0) + 1
+        hot = max(counts, key=counts.get)
+        svc.connect(hot, weight=4.0, max_pending=3)
+        checked, res = check_traffic_parity(trace, svc)
+        assert checked > 0
+
+    def test_mesh1_bit_exact(self):
+        trace = generate_trace(TrafficConfig(seed=11, n_events=120,
+                                             p_program=0.0))
+        svc = AccessService(tile_size=TILE, auto_flush=0, mesh=1,
+                            controller=AdaptiveFlushController(
+                                overhead_us=200.0))
+        checked, _ = check_traffic_parity(trace, svc)
+        assert checked > 0
+
+    @pytest.mark.skipif(N_DEV < 4, reason="needs 4 devices: set "
+                        "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    def test_mesh4_bit_exact(self):
+        trace = generate_trace(TrafficConfig(seed=11, n_events=120,
+                                             p_program=0.0))
+        svc = AccessService(tile_size=TILE, auto_flush=0, mesh=4,
+                            controller=AdaptiveFlushController(
+                                overhead_us=200.0))
+        checked, _ = check_traffic_parity(trace, svc)
+        assert checked > 0
+
+
+# ---------------------------------------------------------------------------
+# controllers
+# ---------------------------------------------------------------------------
+
+class TestAdaptiveController:
+    def test_target_deepens_with_arrival_rate(self):
+        slow = AdaptiveFlushController(overhead_us=200.0)
+        fast = AdaptiveFlushController(overhead_us=200.0)
+        for k in range(50):
+            slow.observe_submit(k * 1000.0)
+            fast.observe_submit(k * 5.0)
+        assert slow.target_depth() <= 2
+        assert fast.target_depth() >= 16
+
+    def test_target_clamped(self):
+        c = AdaptiveFlushController(min_window=2, max_window=8,
+                                    overhead_us=200.0)
+        for k in range(100):
+            c.observe_submit(k * 0.5)        # absurd rate
+        assert c.target_depth() == 8
+        c2 = AdaptiveFlushController(min_window=2, max_window=8,
+                                     overhead_us=200.0)
+        assert c2.target_depth() == 2        # no observations yet
+
+    def test_overhead_ewma_tracks_measured_durations(self):
+        c = AdaptiveFlushController()          # not pinned
+        before = c.snapshot()["overhead_us"]
+        for _ in range(40):
+            c.observe_flush(4, 1000.0, None, 0.0)
+        assert c.snapshot()["overhead_us"] > before * 2
+        pinned = AdaptiveFlushController(overhead_us=123.0)
+        for _ in range(40):
+            pinned.observe_flush(4, 9999.0, None, 0.0)
+        assert pinned.snapshot()["overhead_us"] == 123.0
+
+    def test_deadline_lifecycle(self):
+        c = AdaptiveFlushController(max_wait_us=100.0, overhead_us=200.0)
+        assert c.deadline() is None
+        c.observe_submit(50.0)
+        assert c.deadline() == 150.0
+        c.observe_submit(90.0)                 # oldest wins
+        assert c.deadline() == 150.0
+        assert not c.should_flush(1, 149.0)
+        assert c.should_flush(1, 150.0)
+        c.observe_flush(2, 10.0, None, 160.0)  # full drain clears
+        assert c.deadline() is None
+        c.observe_submit(200.0)
+        c.observe_flush(1, 10.0, None, 210.0, pending_after=3)
+        assert c.deadline() == 310.0           # deferral restarts wait
+
+    def test_never_flushes_empty(self):
+        c = AdaptiveFlushController(overhead_us=200.0)
+        c.observe_submit(0.0)
+        assert not c.should_flush(0, 1e9)
+
+
+class TestFixedController:
+    def test_threshold_and_deadline(self):
+        c = FixedWindowController(4, max_wait_us=100.0)
+        assert c.target_depth() == 4
+        c.observe_submit(0.0)
+        assert not c.should_flush(3, 50.0)
+        assert c.should_flush(4, 50.0)
+        assert c.should_flush(1, 100.0)        # deadline
+
+    def test_drain_cap(self):
+        c = FixedWindowController(4, drain_cap=4)
+        assert c.drain_limit(10) == 4
+        assert c.drain_limit(2) == 2
+        assert FixedWindowController(4).drain_limit(10) is None
+
+
+class TestTick:
+    def test_forced_tick_flushes_empty_window(self):
+        svc = adaptive_service()
+        rep = svc.tick(force=True)             # zero pending: harmless
+        assert rep is not None and rep.order == ()
+        s = svc.stats()
+        assert s["traffic"]["windows"]["n_flushes"] == 1
+        assert s["traffic"]["windows"]["depth_hist"].get("0") == 1
+
+    def test_tick_fires_on_deadline_only(self):
+        clock = {"now": 0.0}
+        svc = AccessService(_scheduler(), auto_flush=0,
+                            controller=AdaptiveFlushController(
+                                min_window=4, max_wait_us=100.0,
+                                overhead_us=200.0),
+                            clock=lambda: clock["now"])
+        assert svc.tick() is None              # nothing pending
+        T = np.arange(32, dtype=np.float32)
+        t = svc.submit_gather(T, np.arange(4), tenant="a")
+        clock["now"] = 50.0
+        assert svc.tick() is None              # deadline not reached
+        clock["now"] = 101.0
+        rep = svc.tick()
+        assert rep is not None and len(rep.order) == 1
+        np.testing.assert_array_equal(np.asarray(svc.wait(t)), T[:4])
+
+
+# ---------------------------------------------------------------------------
+# WFQ + admission through the service
+# ---------------------------------------------------------------------------
+
+class TestServicePolicy:
+    def test_weights_drive_drain_order(self):
+        svc = AccessService(_scheduler(), auto_flush=0)
+        heavy = svc.connect("heavy", weight=4.0)
+        light = svc.connect("light")
+        T = np.arange(64, dtype=np.float32)
+        for k in range(3):
+            light.submit_gather(T, np.arange(4))
+            heavy.submit_gather(T, np.arange(4))
+        rep = svc.flush()
+        tenants = [t for t, _ in rep.order]
+        assert tenants[:3] == ["heavy", "heavy", "heavy"]
+
+    def test_equal_weights_stay_round_robin(self):
+        svc = AccessService(_scheduler(), auto_flush=0)
+        T = np.arange(64, dtype=np.float32)
+        for tenant in ("a", "b", "a", "c"):
+            svc.submit_gather(T, np.arange(4), tenant=tenant)
+        rep = svc.flush()
+        assert [t for t, _ in rep.order] == ["a", "b", "c", "a"]
+
+    def test_drain_limit_splits_by_weight(self):
+        svc = AccessService(_scheduler(), auto_flush=0)
+        svc.connect("a", weight=3.0)
+        T = np.arange(64, dtype=np.float32)
+        for _ in range(8):
+            svc.submit_gather(T, np.arange(4), tenant="a")
+            svc.submit_gather(T, np.arange(4), tenant="b")
+        rep = svc.flush(drain_limit=4)
+        tenants = [t for t, _ in rep.order]
+        assert tenants.count("a") == 3 and tenants.count("b") == 1
+        # deferred leaves drain on the next flush; nothing is lost
+        rep2 = svc.flush(inflight_ok=True)
+        assert len(rep2.order) == 12
+
+    def test_admission_cap_rejects_and_recovers(self):
+        svc = AccessService(_scheduler(), auto_flush=0)
+        core = svc.connect("small", max_pending=2)
+        T = np.arange(64, dtype=np.float32)
+        t1 = core.submit_gather(T, np.arange(4))
+        t2 = core.submit_gather(T, np.arange(4))
+        t3 = core.submit_gather(T, np.arange(4))
+        assert isinstance(svc.poll(t3), QueueFull)
+        with pytest.raises(QueueFullError):
+            svc.wait(t3)
+        s = svc.stats()
+        assert s["rejects"] == 1
+        assert s["traffic"]["tenants"]["small"]["rejects"] == 1
+        svc.flush(inflight_ok=True)
+        np.testing.assert_array_equal(np.asarray(svc.wait(t1)), T[:4])
+        np.testing.assert_array_equal(np.asarray(svc.wait(t2)), T[:4])
+        t4 = core.submit_gather(T, np.arange(4))   # capacity freed
+        assert not isinstance(svc.poll(t4), QueueFull)
+
+    def test_stats_is_a_method_with_serving_sections(self):
+        svc = adaptive_service()
+        s = svc.stats()
+        assert "traffic" in s and "controller" in s and "engine" in s
+        assert s["controller"]["kind"] == "AdaptiveFlushController"
+
+
+# ---------------------------------------------------------------------------
+# telemetry
+# ---------------------------------------------------------------------------
+
+class _T:
+    def __init__(self, tid, tenant):
+        self.tid, self.tenant = tid, tenant
+
+
+class TestTelemetry:
+    def test_latency_interpolates_across_drain_order(self):
+        tel = Telemetry()
+        tel.on_submit(_T(0, "a"), 0.0)
+        tel.on_submit(_T(1, "b"), 0.0)
+        tel.on_flush([("a", 0), ("b", 1)], 100.0, 300.0)
+        # position 0 completes at 200, position 1 at 300
+        assert tel.tenant_stats("a").p50_us == pytest.approx(200.0)
+        assert tel.tenant_stats("b").p50_us == pytest.approx(300.0)
+
+    def test_depth_histogram_buckets(self):
+        tel = Telemetry()
+        for d in (0, 1, 2, 3, 4, 5, 9, 64):
+            tel.on_flush([("a", -1)] * 0, 0.0, 0.0, pending_before=d)
+        h = tel.depth_histogram()
+        assert h == {"0": 1, "1": 1, "2": 1, "3-4": 2, "5-8": 1,
+                     "9-16": 1, "33-64": 1}
+
+    def test_summary_and_render(self):
+        tel = Telemetry()
+        for k in range(10):
+            tel.on_submit(_T(k, f"t{k % 2}"), float(k))
+        tel.on_reject("t9", 10.0)
+        tel.on_flush([(f"t{k % 2}", k) for k in range(10)], 10.0, 20.0)
+        s = tel.summary()
+        assert s["overall"]["n_completed"] == 10
+        assert s["overall"]["rejects"] == 1
+        assert s["overall"]["throughput_per_s"] > 0
+        out = tel.render()
+        assert "p99" in out and "worst-p99 tenants" in out
+
+    def test_unknown_tickets_skipped(self):
+        tel = Telemetry()
+        tel.on_flush([("ghost", 999)], 0.0, 10.0)
+        assert tel.n_completed == 0
+
+
+# ---------------------------------------------------------------------------
+# regression: auto-flush vs unresolved flush_async handles (ISSUE #6 fix
+# satellite) — overlapping windows only ever via inflight_ok=True opt-in
+# ---------------------------------------------------------------------------
+
+class TestAutoFlushDecoupledRegression:
+    def _run(self, svc):
+        rng = np.random.default_rng(0)
+        table = jnp.asarray(rng.normal(size=(64,)).astype(np.float32))
+        perm = rng.permutation(64).astype(np.int32)
+        side = []
+
+        def access(loop, k, state):
+            # open-loop side traffic lands mid-window: trips the
+            # service's auto-flush while the loop's previous window
+            # handle is still unresolved
+            for i in range(3):
+                idx = perm[8 * i:8 * i + 8]
+                side.append((svc.submit_gather(table, idx,
+                                               tenant="side"), idx))
+            return loop.submit_gather(state, perm)
+
+        def compute(k, state, xg):
+            return xg
+
+        out = DecoupledLoop(svc).run(table, 6, access, compute)
+        want = np.asarray(table)
+        for _ in range(6):
+            want = want[perm]
+        np.testing.assert_array_equal(np.asarray(out), want)
+        # no ticket dropped: every side submission redeems exactly
+        for t, idx in side:
+            np.testing.assert_array_equal(np.asarray(svc.wait(t)),
+                                          np.asarray(table)[idx])
+        assert len(side) == 18
+
+    def test_auto_flush_threshold_interleaves_safely(self):
+        self._run(AccessService(_scheduler(), auto_flush=2))
+
+    def test_controller_interleaves_safely(self):
+        self._run(AccessService(
+            _scheduler(), auto_flush=0,
+            controller=FixedWindowController(2, max_wait_us=1e12)))
+
+
+# ---------------------------------------------------------------------------
+# nightly soak (longer trace; the CI traffic job runs it under --runslow
+# with 8 forced host devices)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+class TestTrafficSoak:
+    def test_long_trace_parity(self):
+        trace = generate_trace(TrafficConfig(
+            seed=42, n_events=4000, n_tenants=2000, p_program=0.02))
+        checked, res = check_traffic_parity(trace, adaptive_service())
+        assert checked > 3500
+        assert res.n_flushes > 50
+
+    @pytest.mark.skipif(N_DEV < 4, reason="needs 4 devices")
+    def test_long_trace_parity_mesh4(self):
+        trace = generate_trace(TrafficConfig(
+            seed=43, n_events=1000, n_tenants=2000, p_program=0.0))
+        svc = AccessService(tile_size=TILE, auto_flush=0, mesh=4,
+                            controller=AdaptiveFlushController(
+                                overhead_us=200.0))
+        checked, _ = check_traffic_parity(trace, svc)
+        assert checked > 900

@@ -1,0 +1,174 @@
+"""Hypothesis property tests on the serving layer's fairness and
+admission-control invariants (ISSUE #6 satellite).
+
+Requires the optional ``hypothesis`` dependency (requirements-dev.txt);
+collection skips cleanly on bare environments. Each property's body is a
+plain checker function so the same assertions can be driven without
+hypothesis (the fuzz corpus reuses none of these — they are scheduler-
+level, not parity-level).
+
+Properties:
+  * **no starvation** — under drain-limited WFQ every backlogged tenant
+    is served at least once every ``ceil(2*W/(w*D)) + 2`` windows (W =
+    total weight, w = the tenant's weight, D = drain limit), and a
+    drain-limited flush always drains exactly ``min(D, pending)`` leaves
+    (work conservation: ``ceil(total/D)`` flushes to empty).
+  * **weights are monotone** — on a fixed replayed trace with a
+    deterministic service-time model, doubling a tenant's SLO weight
+    never increases that tenant's p99 submit->redeem latency.
+  * **rejections are inert** — submissions refused by admission control
+    (``QueueFull``) never mutate RMW table state: the flushed result
+    equals the NumPy oracle applied to the admitted prefix only, and the
+    caller's array is untouched.
+"""
+import math
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import Engine  # noqa: E402
+from repro.core.scheduler import QueueFull, Scheduler  # noqa: E402
+from repro.serve import (AccessService,  # noqa: E402
+                         FixedWindowController, TrafficConfig,
+                         generate_trace, replay_trace)
+
+_small = dict(max_examples=25, deadline=None)
+_ENGINE = Engine(tile_size=64)          # shared: jit caches hit across runs
+_T = np.arange(64, dtype=np.float32)
+
+
+def _service_model(depth, report):
+    return 200.0 + 8.0 * depth
+
+
+# ---------------------------------------------------------------------------
+# no starvation / work conservation
+# ---------------------------------------------------------------------------
+
+def check_no_starvation(seed: int) -> None:
+    rng = np.random.default_rng(seed)
+    n_ten = int(rng.integers(2, 6))
+    weights = [float(rng.choice([0.25, 0.5, 1.0, 2.0, 4.0]))
+               for _ in range(n_ten)]
+    counts = [int(rng.integers(1, 13)) for _ in range(n_ten)]
+    drain = int(rng.integers(1, 7))
+    sched = Scheduler(engine=_ENGINE)
+    for i, w in enumerate(weights):
+        sched.configure_tenant(f"t{i}", weight=w)
+    order = [i for i, c in enumerate(counts) for _ in range(c)]
+    rng.shuffle(order)
+    for i in order:
+        sched.submit_gather(_T, np.arange(4), tenant=f"t{i}")
+
+    served_at: dict = {}
+    wi = 0
+    while sched.pending:
+        before = sched.pending
+        rep = sched.flush(drain_limit=drain, inflight_ok=True)
+        # work conservation: a drain-limited window is always full
+        assert len(rep.order) == min(drain, before)
+        for t, _ in rep.order:
+            served_at.setdefault(t, []).append(wi)
+        wi += 1
+    assert wi == math.ceil(sum(counts) / drain)
+
+    total_w = sum(weights)
+    for i, w in enumerate(weights):
+        sv = served_at[f"t{i}"]
+        assert len(sv) == counts[i]          # nothing lost, nothing dup'd
+        gaps = [sv[0] + 1] + [b - a for a, b in zip(sv, sv[1:])]
+        bound = math.ceil(2.0 * total_w / (w * drain)) + 2
+        assert max(gaps) <= bound, (
+            f"tenant t{i} (w={w}) starved: served at windows {sv}, "
+            f"worst gap {max(gaps)} > bound {bound} "
+            f"(weights={weights}, counts={counts}, D={drain})")
+
+
+class TestNoStarvation:
+    @given(st.integers(0, 10_000))
+    @settings(**_small)
+    def test_every_backlogged_tenant_is_served_within_bound(self, seed):
+        check_no_starvation(seed)
+
+
+# ---------------------------------------------------------------------------
+# weight monotonicity
+# ---------------------------------------------------------------------------
+
+def hot_tenant_p99(seed: int, threshold: int, weight: float) -> float:
+    trace = generate_trace(TrafficConfig(
+        seed=seed, n_events=250, n_tenants=50, p_program=0.0, p_tick=0.0))
+    counts: dict = {}
+    for e in trace.events:
+        counts[e.tenant] = counts.get(e.tenant, 0) + 1
+    hot = max(counts, key=counts.get)
+    svc = AccessService(tile_size=256, auto_flush=0,
+                        controller=FixedWindowController(
+                            threshold, max_wait_us=2000.0,
+                            drain_cap=max(2, threshold // 2)))
+    svc.connect(hot, weight=weight)
+    replay_trace(trace, svc, service_time=_service_model)
+    return svc.telemetry.tenant_stats(hot).p99_us
+
+
+def check_weight_monotone(seed: int, threshold: int, base_w: float) -> None:
+    lo = hot_tenant_p99(seed, threshold, base_w)
+    hi = hot_tenant_p99(seed, threshold, 2.0 * base_w)
+    assert hi <= lo * 1.001 + 1e-6, (
+        f"doubling weight {base_w} raised hot-tenant p99 "
+        f"{lo:.1f} -> {hi:.1f} (seed={seed}, threshold={threshold})")
+
+
+class TestWeightMonotone:
+    @given(st.integers(0, 5), st.sampled_from([4, 8]),
+           st.sampled_from([1.0, 2.0]))
+    @settings(max_examples=8, deadline=None)
+    def test_doubling_weight_never_raises_p99(self, seed, threshold,
+                                              base_w):
+        check_weight_monotone(seed, threshold, base_w)
+
+
+# ---------------------------------------------------------------------------
+# rejected submissions are inert
+# ---------------------------------------------------------------------------
+
+def check_rejects_inert(seed: int) -> None:
+    rng = np.random.default_rng(seed)
+    rows = 32
+    table = rng.integers(0, 2 ** 10, size=(rows,)).astype(np.int32)
+    before = table.copy()
+    cap = int(rng.integers(1, 4))
+    n_sub = cap + int(rng.integers(1, 5))     # strictly over the cap
+    sched = Scheduler(engine=_ENGINE)
+    sched.configure_tenant("capped", max_pending=cap)
+
+    subs = []
+    tickets = []
+    for _ in range(n_sub):
+        idx = rng.integers(0, rows, size=8).astype(np.int32)
+        vals = rng.integers(0, 2 ** 8, size=8).astype(np.int32)
+        t = sched.submit_rmw(table, idx, vals, op="ADD", tenant="capped")
+        tickets.append(t)
+        subs.append((idx, vals, isinstance(sched.poll(t), QueueFull)))
+    assert sum(r for _, _, r in subs) == n_sub - cap
+
+    rep = sched.flush()
+    got = np.asarray(sched.result(tickets[0]))
+    want = before.copy()
+    for idx, vals, rejected in subs:
+        if rejected:
+            continue                           # must leave no trace
+        np.add.at(want, idx, vals)
+    np.testing.assert_array_equal(got, want)
+    np.testing.assert_array_equal(table, before)   # caller's array intact
+    assert rep.order and all(t == "capped" for t, _ in rep.order)
+
+
+class TestRejectsInert:
+    @given(st.integers(0, 10_000))
+    @settings(**_small)
+    def test_queue_full_never_mutates_tables(self, seed):
+        check_rejects_inert(seed)
