@@ -1,0 +1,102 @@
+"""Decode-batch KV serving bench: one coalesced window vs per-sequence
+flushes.
+
+The serving claim under test (paper §2/§6): a *shared* access engine that
+fuses a decode batch's page-table gathers into one window — fetching the
+tenants' shared prefix pages once — beats each sequence flushing its own
+window, which re-pays the flush overhead per sequence and re-fetches
+every shared page.
+
+Like the traffic bench, the comparison runs on a deterministic cost
+model, so every row is machine-independent and bit-reproducible. One
+``KvPoolServer`` run (16 decode steps, 8 sequences over 4 tenants, a
+4-page shared prefix, pool growing mid-flight) yields per-window fused
+unique row counts AND the sum of per-request unique counts from
+``FlushReport.gather_coalescing`` — the batched and sequential fetch
+costs of the *same* workload:
+
+  batched     per step: 1 flush   = OVERHEAD + ROW_US*fused + RMW_US*lanes
+  sequential  per step: S flushes = S*OVERHEAD + ROW_US*sum_uniq
+                                    + RMW_US*lanes
+
+Rows (JSON via ``benchmarks.run kv --json``):
+  kv_decode_pool                  workload shape + mid-flight growths
+  kv_decode_coalesce_gain         mean fused cross-request gain (>1)
+  kv_decode_batched_thr           tokens/s on the virtual clock
+  kv_decode_sequential_thr        tokens/s, per-sequence windows
+  kv_decode_batched_vs_sequential gate_ratio = thr_batched / thr_seq
+The gate ratio must stay > 1 and is regression-gated by
+``benchmarks.compare`` against snapshots/BENCH_kv.json.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+
+# deterministic cost model (us) — same spirit as traffic_bench's
+OVERHEAD_US = 200.0     # per-flush dispatch/lowering overhead
+ROW_US = 2.0            # per unique pool row fetched
+RMW_US = 1.0            # per append lane
+
+N_SEQS = 8
+N_TENANTS = 4
+N_STEPS = 16
+PAGE = 4
+D = 8
+PREFIX_PAGES = 4
+PROMPT = 5
+
+
+def run():
+    from repro.serve import KvPoolServer
+
+    rng = np.random.default_rng(0xD1_0B)
+
+    def vals(*s):
+        return rng.integers(0, 4, size=s).astype(np.float32)
+
+    srv = KvPoolServer(page_size=PAGE, d=D,
+                       init_pages=PREFIX_PAGES + N_SEQS * 2,
+                       growth_pages=2)
+    srv.create_prefix("sys", vals(PREFIX_PAGES * PAGE, 2 * D))
+    for i in range(N_SEQS):
+        srv.admit(f"seq{i}", f"tenant{i % N_TENANTS}", vals(PROMPT, 2 * D),
+                  prefix="sys")
+
+    t_batched = 0.0
+    t_sequential = 0.0
+    tokens = 0
+    gains = []
+    for _ in range(N_STEPS):
+        new = {f"seq{i}": vals(2 * D) for i in range(N_SEQS)}
+        _, report = srv.decode_batch(new)
+        # one fused gather node on the pool: (gain, sum of per-request
+        # uniques, fused unique) — deterministic, streams are host numpy
+        (gain, sum_uniq, fused), = report.gather_coalescing.values()
+        gains.append(gain)
+        lanes = len(new)
+        t_batched += OVERHEAD_US + ROW_US * fused + RMW_US * lanes
+        t_sequential += (len(new) * OVERHEAD_US + ROW_US * sum_uniq
+                         + RMW_US * lanes)
+        tokens += lanes
+
+    st = srv.stats()
+    emit("kv_decode_pool", 0.0,
+         f"seqs={N_SEQS} tenants={N_TENANTS} steps={N_STEPS} "
+         f"prefix_pages={PREFIX_PAGES} pages={st['cap_pages']} "
+         f"growths={st['growths']} model={OVERHEAD_US:.0f}"
+         f"+{ROW_US:.0f}*rows+{RMW_US:.0f}*lanes us")
+    emit("kv_decode_coalesce_gain", 0.0,
+         f"gate_ratio={float(np.mean(gains)):.2f} "
+         f"(mean cross-request unique-row gain per window)")
+
+    thr_b = tokens / (t_batched / 1e6)
+    thr_s = tokens / (t_sequential / 1e6)
+    emit("kv_decode_batched_thr", t_batched / tokens,
+         f"thr={thr_b:.0f} tok/s (virtual)")
+    emit("kv_decode_sequential_thr", t_sequential / tokens,
+         f"thr={thr_s:.0f} tok/s (virtual)")
+    emit("kv_decode_batched_vs_sequential", t_batched / tokens,
+         f"gate_ratio={thr_b / thr_s:.2f} "
+         f"(batched {thr_b:.0f} vs per-seq {thr_s:.0f} tok/s)")

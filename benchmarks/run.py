@@ -20,14 +20,14 @@ from pathlib import Path
 
 
 def main() -> None:
-    from benchmarks import (common, locality, microbench, pipeline_bench,
-                            scheduler_bench, sharded_bench, tilesize,
-                            traffic_bench, workloads)
+    from benchmarks import (common, kv_bench, locality, microbench,
+                            pipeline_bench, scheduler_bench, sharded_bench,
+                            tilesize, traffic_bench, workloads)
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("only", nargs="?", default=None,
                     choices=("microbench", "locality", "workloads",
                              "tilesize", "scheduler", "sharded",
-                             "pipeline", "traffic"),
+                             "pipeline", "traffic", "kv"),
                     help="run a single module (default: all)")
     ap.add_argument("--json", action="store_true",
                     help="write BENCH_<module>.json in the cwd")
@@ -39,7 +39,8 @@ def main() -> None:
                       ("scheduler", scheduler_bench),
                       ("sharded", sharded_bench),
                       ("pipeline", pipeline_bench),
-                      ("traffic", traffic_bench)):
+                      ("traffic", traffic_bench),
+                      ("kv", kv_bench)):
         if args.only and args.only != name:
             continue
         print(f"# --- {name} ---", flush=True)

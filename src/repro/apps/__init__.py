@@ -1,20 +1,27 @@
 """repro.apps — end-to-end iterative applications on the access engine.
 
-One app per Table-1 domain, each runnable eager, pipelined single-device,
-and pipelined across a ``ShardedEngine`` mesh, each bit-exact against a
-sequential NumPy oracle (``testing.harness.check_app_parity``):
+One app per Table-1 / serving domain, each runnable eager, pipelined
+single-device, and pipelined across a ``ShardedEngine`` mesh, each
+bit-exact against a sequential NumPy oracle
+(``testing.harness.check_app_parity``):
 
-  spmv      SpMV power iteration      (scientific — NAS CG shape)
-  bfs       level-synchronous BFS push (graph — GAP BFS, range fuser)
-  hashjoin  hash-join probe            (database — conditional ILD/IST)
+  spmv           SpMV power iteration       (scientific — NAS CG shape)
+  bfs            level-synchronous BFS push  (graph — GAP BFS, range fuser)
+  hashjoin       hash-join probe             (database — conditional ILD/IST)
+  kv_serve       paged-attention KV decode   (LLM serving — page-table ILD,
+                                             unique-writer appends, pool
+                                             grown mid-flight)
+  embedding_bag  embedding lookup/update     (recsys — duplicate-dest
+                                             segment-combined RMW push)
 
 Every app exposes ``make_problem``/``make_graph``, ``reference`` (the
 oracle), ``run(..., mode=, mesh=)`` and a seeded ``demo``/
 ``demo_reference`` pair that the parity harness and the pipeline
 benchmark share.
 """
-from repro.apps import bfs, hashjoin, spmv
+from repro.apps import bfs, embedding_bag, hashjoin, kv_serve, spmv
 
-APPS = {"spmv": spmv, "bfs": bfs, "hashjoin": hashjoin}
+APPS = {"spmv": spmv, "bfs": bfs, "hashjoin": hashjoin,
+        "kv_serve": kv_serve, "embedding_bag": embedding_bag}
 
-__all__ = ["spmv", "bfs", "hashjoin", "APPS"]
+__all__ = ["spmv", "bfs", "hashjoin", "kv_serve", "embedding_bag", "APPS"]

@@ -6,8 +6,33 @@ Forward  = ILD   : bulk gather from the vocab table (optionally through the
                    fetched once).
 Backward = IRMW  : the vocab-gradient scatter-add. XLA's native lowering of
                    duplicate-index scatter serializes updates; the engine
-                   path (sort by token -> segment-sum -> unique scatter) is
-                   the TPU-native single-writer RMW of paper §2.2/§3.2.
+                   path segment-combines per-token contributions
+                   (``apps.embedding_bag.segment_combine``: sort by token ->
+                   segment-sum -> unique scatter) so the dense cotangent is
+                   built by a single-writer RMW (paper §2.2/§3.2).
+
+Memory contract of the backward
+-------------------------------
+Reverse-mode AD requires a *dense* ``(V, D)`` cotangent for the table —
+that one allocation is inherent to ``jax.grad`` over ``embed_lookup`` and
+both backward paths pay it exactly once:
+
+  * ``dx100_bwd=True`` (default): ``segment_combine`` reduces the
+    ``(B*T, D)`` per-token gradients to one exact partial sum per distinct
+    token, then a ``mode="drop", unique_indices=True`` scatter writes each
+    row once into the single zeros buffer. No second dense temporary, no
+    serialized duplicate-index updates. Out-of-range tokens drop (the
+    unified store policy).
+  * ``dx100_bwd=False``: the serialized baseline — a plain duplicate-index
+    ``.at[tok].add`` on the same single zeros buffer (XLA lowers the
+    collisions sequentially). This is the path benchmarks compare against.
+
+Per-microbatch cost is therefore one ``(V, D)`` buffer + ``O(B*T*D)``
+segment work; earlier revisions built the zeros buffer *and* routed it
+through a second jitted full-table RMW, doubling peak backward memory.
+If the update stream is sparse and AD is not required, skip the dense
+cotangent entirely and push gradients through the scheduler like
+``apps.embedding_bag`` does (``submit_rmw`` op="ADD").
 """
 from __future__ import annotations
 
@@ -23,7 +48,15 @@ from repro.core import bulk_ops
 def embed_lookup(table: jax.Array, tokens: jax.Array,
                  dx100_fwd: bool = False, dx100_bwd: bool = True
                  ) -> jax.Array:
-    """table: (V, D); tokens: int32 (...); returns (..., D)."""
+    """Embedding lookup with a DX100-shaped custom VJP.
+
+    table: (V, D); tokens: int32 (...); returns (..., D).
+    dx100_fwd: route the forward gather through the reorder+coalesce
+    engine (duplicate tokens fetched once) instead of plain indexing.
+    dx100_bwd: build the table cotangent via segment-combine + unique
+    scatter instead of the serialized duplicate-index scatter — see the
+    module docstring's memory contract.
+    """
     if dx100_fwd:
         return bulk_ops.bulk_gather(table, tokens)
     return table[tokens]
@@ -38,12 +71,15 @@ def _bwd(dx100_fwd, dx100_bwd, res, g):
     tokens, tshape = res
     flat_tok = tokens.reshape(-1)
     flat_g = g.reshape(-1, tshape[-1])
-    zeros = jnp.zeros(tshape, flat_g.dtype)
     if dx100_bwd:
-        grad = bulk_ops.bulk_rmw(zeros, flat_tok, flat_g, op="ADD")
+        from repro.apps.embedding_bag import segment_combine
+        dest, summed = segment_combine(flat_tok, flat_g,
+                                       num_rows=tshape[0])
+        grad = jnp.zeros(tshape, g.dtype).at[dest].add(
+            summed, mode="drop", unique_indices=True)
     else:
-        grad = zeros.at[flat_tok].add(flat_g)
-    return (grad.astype(g.dtype), None)
+        grad = jnp.zeros(tshape, g.dtype).at[flat_tok].add(flat_g)
+    return (grad, None)
 
 
 embed_lookup.defvjp(_fwd, _bwd)

@@ -1,8 +1,34 @@
+"""repro.serve — the serving layer on top of the shared scheduler.
+
+Public surface:
+
+  AccessService            async multi-tenant frontend (connect/submit/
+                           flush, controllers, telemetry, ``explain()``)
+  CoreClient               one tenant's handle (``AccessService.connect``)
+  FlushController,         window-sizing policies: fixed threshold vs the
+  FixedWindowController,   adaptive EOQ controller fed by measured arrival
+  AdaptiveFlushController  rate, flush overhead and plan-IR coalescing gain
+  plan_gain                the coalescing-gain extractor the controller uses
+  Telemetry, TenantStats   per-tenant submit->redeem latency, histograms
+  TrafficConfig, Trace,    open-loop workload generator + committed traces
+  TrafficEvent,
+  generate_trace
+  replay_trace,            virtual-time replay against a service
+  ReplayResult
+  KvPoolServer,            paged-KV decode-batch driver: shared prefixes,
+  KvSequence               one flush window per batch, mid-flight growth
+  PagedKVCache             jit-traceable in-model page pool (no scheduler)
+  ServeLoop                continuous-batching-lite model host
+
+DESIGN.md §4 (service), §10 (traffic/telemetry), §11 (KV serving);
+docs/ARCHITECTURE.md traces a submission end-to-end.
+"""
 from repro.serve.access_service import (AccessService,  # noqa: F401
                                         AdaptiveFlushController,
                                         CoreClient, FixedWindowController,
                                         FlushController, plan_gain)
 from repro.serve.kv_cache import PagedKVCache  # noqa: F401
+from repro.serve.kv_driver import KvPoolServer, KvSequence  # noqa: F401
 from repro.serve.serve import ServeLoop  # noqa: F401
 from repro.serve.telemetry import Telemetry, TenantStats  # noqa: F401
 from repro.serve.traffic import (ReplayResult, Trace,  # noqa: F401

@@ -1,17 +1,25 @@
-"""Paged KV cache — the DX100 scratchpad/row-table mapped onto serving.
+"""Paged KV cache — the jit-traceable, *in-model* page pool.
 
 A global page pool (pages x page_size tokens) holds K/V for all sequences;
-each sequence owns a page list (the page table). This is literally the
+each sequence owns a page list (the page table). The mapping is the
 paper's structure:
 
   page table            = Row Table (which "DRAM rows" a bulk access touches)
-  page gather for attn   = ILD through the row-table plan (sorted, coalesced:
-                           pages shared by beam/prefix-cached sequences are
-                           fetched ONCE)
+  page gather for attn   = ILD: ``gather_pages`` routes through
+                           ``bulk_ops.bulk_gather`` (sorted, deduped —
+                           pages shared by beam/prefix-cached sequences
+                           within this cache are fetched once)
   cache append           = IST with unique destinations (single writer)
 
-The pool is sharded over the DP axes by allocating disjoint page ranges per
-shard (address-range partitioning, §6.6).
+Scope: this is the pure-functional pytree a compiled model step wants —
+fixed shapes, one XLA computation, used by ``models/`` decode paths and
+``serve.ServeLoop``. It does NOT go through the scheduler: no flush
+windows, no cross-tenant coalescing, no mid-flight pool growth. The
+scheduler-routed serving path with those properties is
+``apps.kv_serve`` (verified app) + ``serve.kv_driver.KvPoolServer``
+(decode-batch driver) — see DESIGN.md §11. On a mesh, shard the pool by
+allocating disjoint page ranges per shard (address-range partitioning,
+§6.6); the scheduler path gets this from ``ShardedEngine`` directly.
 """
 from __future__ import annotations
 

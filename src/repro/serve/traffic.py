@@ -77,11 +77,34 @@ class TrafficConfig:
     float_rmw: bool = False        # True adds float-ADD RMW tables (bench
     #                                only — parity then needs allclose)
     n_program_shapes: int = 3      # distinct fuzzer programs reused
+    # -- paged-KV load (apps.kv_serve's access shape as open-loop traffic).
+    # Both probabilities default to 0.0: the KV pool table, its rng, and
+    # the kv_decode/kv_append event kinds only exist when enabled, so
+    # pre-existing configs generate byte-identical traces (pinned digests
+    # like benchmarks/traffic_bench.DIGEST stay valid).
+    p_kv_decode: float = 0.0       # page-table history gathers on the pool
+    p_kv_append: float = 0.0       # unique-slot ADD appends into the pool
+    kv_seqs: int = 6               # concurrent sequences sharing the pool
+    kv_page_size: int = 8          # slots per physical page
+    kv_pages: int = 48             # pool capacity (pages); appends wrap by
+    #                                resetting the longest sequence
+    kv_prefix_pages: int = 2       # shared-prefix pages (hot across seqs)
+    kv_d: int = 4                  # K/V row width
 
 
 @dataclasses.dataclass
 class TrafficEvent:
-    """One trace entry. ``kind``: gather | rmw | program | tick."""
+    """One trace entry.
+
+    ``kind``: gather | rmw | program | tick | kv_decode | kv_append.
+    ``kv_decode`` is a gather whose index stream walks a sequence's page
+    table (shared-prefix pages hot across tenants); ``kv_append`` is an
+    ADD RMW into freshly allocated pool slots (integer-valued f32, so the
+    parity oracle can hold it bit-exact). Replay lowers them through
+    ``submit_gather``/``submit_rmw`` like their plain counterparts — the
+    *kinds* exist so load generators and telemetry can distinguish KV
+    serving traffic from generic bulk traffic.
+    """
     t_us: float
     kind: str
     tenant: str
@@ -195,6 +218,50 @@ def generate_trace(cfg: TrafficConfig) -> Trace:
             c = generate_case(0xD1_0000 + cfg.seed * 31 + k)
             programs.append((c.pattern, c.env, min(c.n, 128)))
 
+    # paged-KV load (fully gated: a disabled config draws nothing from the
+    # main rng here and adds no tables — pinned digests stay valid). KV
+    # internals use their own rng so enabling KV perturbs only KV events.
+    kv_on = cfg.p_kv_decode > 0 or cfg.p_kv_append > 0
+    if kv_on:
+        if cfg.kv_pages <= cfg.kv_prefix_pages:
+            raise ValueError("kv_pages must exceed kv_prefix_pages")
+        krng = np.random.default_rng(0xD1_00F0 + cfg.seed)
+        p = cfg.kv_page_size
+        tables["K0"] = krng.integers(
+            0, 8, size=(cfg.kv_pages * p, cfg.kv_d)).astype(np.float32)
+        table_ops["K0"] = "ADD"
+        kv_lens = [cfg.kv_prefix_pages * p] * cfg.kv_seqs
+        kv_tables = [list(range(cfg.kv_prefix_pages))
+                     for _ in range(cfg.kv_seqs)]
+        kv_free = list(range(cfg.kv_prefix_pages, cfg.kv_pages))
+
+        def kv_slots(s: int) -> np.ndarray:
+            pages = np.asarray(kv_tables[s], np.int32)
+            flat = (pages[:, None] * p
+                    + np.arange(p, dtype=np.int32)[None, :]).reshape(-1)
+            return flat[:kv_lens[s]]
+
+        def kv_alloc(s: int, want: int) -> np.ndarray:
+            """Slots for ``want`` new tokens of seq ``s``; when the pool
+            is exhausted the longest sequence is reset (its private pages
+            return to the free list) so the trace wraps instead of OOMing."""
+            dests = []
+            for _ in range(want):
+                page_i, off = divmod(kv_lens[s], p)
+                if page_i == len(kv_tables[s]):
+                    if not kv_free:
+                        victim = int(np.argmax(kv_lens))
+                        kv_free.extend(kv_tables[victim]
+                                       [cfg.kv_prefix_pages:])
+                        del kv_tables[victim][cfg.kv_prefix_pages:]
+                        kv_lens[victim] = cfg.kv_prefix_pages * p
+                        if victim == s:
+                            page_i, off = divmod(kv_lens[s], p)
+                    kv_tables[s].append(kv_free.pop(0))
+                dests.append(kv_tables[s][page_i] * p + off)
+                kv_lens[s] += 1
+            return np.asarray(dests, np.int32)
+
     # zipf popularity over tenant/table ranks; a seeded shuffle maps rank
     # to identity so "the hot tenant" isn't always t0000 across seeds
     tenant_ids = rng.permutation(cfg.n_tenants)
@@ -243,6 +310,22 @@ def generate_trace(cfg: TrafficConfig) -> Trace:
             events.append(TrafficEvent(
                 t_us=t_us, kind="rmw", tenant=tenant, table=name, idx=idx,
                 values=vals, op=table_ops[name], cond=cond))
+        elif kv_on and r < (cfg.p_tick + cfg.p_program + cfg.p_rmw
+                            + cfg.p_kv_decode):
+            s = int(krng.integers(0, cfg.kv_seqs))
+            events.append(TrafficEvent(
+                t_us=t_us, kind="kv_decode", tenant=tenant, table="K0",
+                idx=kv_slots(s)))
+        elif kv_on and r < (cfg.p_tick + cfg.p_program + cfg.p_rmw
+                            + cfg.p_kv_decode + cfg.p_kv_append):
+            s = int(krng.integers(0, cfg.kv_seqs))
+            want = int(krng.integers(1, cfg.kv_page_size + 1))
+            dests = kv_alloc(s, want)
+            vals = krng.integers(
+                0, 8, size=(want, cfg.kv_d)).astype(np.float32)
+            events.append(TrafficEvent(
+                t_us=t_us, kind="kv_append", tenant=tenant, table="K0",
+                idx=dests, values=vals, op="ADD"))
         else:
             name = f"G{int(rng.choice(cfg.n_gather_tables, p=p_gt))}"
             rows = tables[name].shape[0]
@@ -337,10 +420,12 @@ def replay_trace(trace: Trace, service, *,
         return rep
 
     def submit(ev: TrafficEvent) -> Ticket:
-        if ev.kind == "gather":
+        # kv_decode/kv_append are page-structured load generators; they
+        # lower to the same two bulk submissions as their plain kinds
+        if ev.kind in ("gather", "kv_decode"):
             return sched.submit_gather(trace.tables[ev.table], ev.idx,
                                        tenant=ev.tenant)
-        if ev.kind == "rmw":
+        if ev.kind in ("rmw", "kv_append"):
             return sched.submit_rmw(trace.tables[ev.table], ev.idx,
                                     ev.values, op=ev.op, cond=ev.cond,
                                     tenant=ev.tenant)

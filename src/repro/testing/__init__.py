@@ -18,6 +18,8 @@ from repro.testing.fuzzer import (FuzzCase, MixedFlushCase, generate_case,
 from repro.testing.harness import (CONFIG_MATRIX, EAGER_CONFIGS,
                                    JIT_CONFIGS, EngineConfig, ParityError,
                                    check_app_parity, check_case_parity,
+                                   check_embedding_parity,
+                                   check_kv_parity,
                                    check_mixed_flush_parity,
                                    check_pattern_parity,
                                    check_scheduler_parity,
@@ -34,6 +36,7 @@ __all__ = [
     "generate_traffic_case", "check_traffic_parity",
     "CONFIG_MATRIX", "EAGER_CONFIGS", "JIT_CONFIGS", "EngineConfig",
     "ParityError", "check_app_parity", "check_case_parity",
+    "check_embedding_parity", "check_kv_parity",
     "check_pattern_parity",
     "check_scheduler_parity", "check_sharded_parity",
     "default_sharded_cases",

@@ -364,8 +364,12 @@ def generate_traffic_case(seed: int):
     shape, tenant skew, event mix, and tick density vary across seeds —
     the adaptive flush controller gets exercised across burst/idle phase
     boundaries, and high-``p_tick`` seeds produce deadline pops on an
-    already-drained queue (the empty-window flush). Deterministic per
-    seed; replay + oracle live in ``harness.check_traffic_parity``.
+    already-drained queue (the empty-window flush). About a third of the
+    seeds enable paged-KV serving events (``kv_decode`` page-table
+    gathers + ``kv_append`` unique-slot RMWs against a shared pool, with
+    pool wrap-around) so the serving shape rides the same differential
+    corpus. Deterministic per seed; replay + oracle live in
+    ``harness.check_traffic_parity``.
     """
     from repro.serve.traffic import TrafficConfig, generate_trace
     rng = np.random.default_rng(0xD1_07AF + seed)
@@ -382,4 +386,11 @@ def generate_traffic_case(seed: int):
         p_tick=float(rng.choice((0.01, 0.08))),
         p_cond=float(rng.choice((0.0, 0.3))),
     )
+    # KV knobs drawn AFTER the base config so pre-existing seeds keep the
+    # exact burst/mix shapes the corpus property tests characterize
+    p_kv = float(rng.choice((0.0, 0.0, 0.3)))
+    if p_kv > 0:
+        cfg = dataclasses.replace(
+            cfg, p_kv_decode=p_kv / 2.0, p_kv_append=p_kv / 2.0,
+            kv_pages=int(rng.choice((12, 48))))  # small wraps the pool
     return generate_trace(cfg)

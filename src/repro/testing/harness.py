@@ -502,6 +502,139 @@ def check_app_parity(app_names: Sequence[str] | None = None, *,
     return checked, ran
 
 
+def check_kv_parity(*, seeds: Sequence[int] = (0, 1),
+                    modes: Sequence[str] = ("eager", "sequential",
+                                            "pipelined"),
+                    mesh_sizes: Sequence[int] = (),
+                    n_steps: int = 6) -> int:
+    """Paged-KV decode-batch parity (``apps.kv_serve``) with the two
+    properties the generic app check cannot see:
+
+      * the pool must actually grow **mid-flight** (``stats.growths > 0``)
+        — otherwise the dynamic-table path (plan-cache miss on a new
+        ``window_signature``, cost model re-decision) silently went
+        unexercised;
+      * cross-tenant coalescing on the shared prefix pages must be real:
+        the scheduler's flush reports show fused gather nodes spanning
+        multiple tenants.
+
+    Every mode (and every mesh size with enough host devices) is compared
+    bit-exact (rtol=0) against the sequential NumPy oracle. Returns the
+    number of comparisons made.
+    """
+    import jax
+
+    from repro.apps import kv_serve
+
+    n_dev = len(jax.devices())
+    checked = 0
+    for seed in seeds:
+        prob = kv_serve.make_problem(seed)
+        want = kv_serve.reference(prob, n_steps)
+        for mode in modes:
+            stats: dict = {}
+            got = kv_serve.run(kv_serve.make_problem(seed), n_steps,
+                               mode=mode, stats_out=stats)
+            _assert_match(f"[kv seed={seed} {mode}] vs NumPy oracle",
+                          got, want, rtol=0, atol=0)
+            if stats["growths"] == 0:
+                raise ParityError(
+                    f"[kv seed={seed} {mode}] pool never grew mid-flight "
+                    "— the dynamic-table path was not exercised")
+            checked += 1
+        for ms in mesh_sizes:
+            if ms > n_dev:
+                continue
+            got = kv_serve.run(kv_serve.make_problem(seed), n_steps,
+                               mode="pipelined", mesh=ms)
+            _assert_match(f"[kv seed={seed} mesh={ms}] vs NumPy oracle",
+                          got, want, rtol=0, atol=0)
+            checked += 1
+        # cross-tenant coalescing on the shared prefix pages must be
+        # real: record every access window's report and demand a fused
+        # gather whose cross-request gain beats 1x
+        from repro.serve import AccessService
+        service = AccessService(auto_flush=0)
+        reports = []
+        orig_flush = service.flush_async
+
+        def recording_flush(**kw):
+            handle = orig_flush(**kw)
+            reports.append(handle.report)
+            return handle
+
+        service.flush_async = recording_flush
+        got = kv_serve.run(kv_serve.make_problem(seed), n_steps,
+                           mode="pipelined", service=service)
+        _assert_match(f"[kv seed={seed} recorded] vs NumPy oracle",
+                      got, want, rtol=0, atol=0)
+        gains = [g for rep in reports
+                 for (g, _, _) in rep.gather_coalescing.values()]
+        if not any(g > 1.0 for g in gains):
+            raise ParityError(
+                f"[kv seed={seed}] no fused gather window showed "
+                f"cross-request coalescing gain > 1x (gains={gains}) — "
+                "shared prefix pages were not actually shared")
+        checked += 1
+    return checked
+
+
+def check_embedding_parity(*, seeds: Sequence[int] = (0, 1),
+                           modes: Sequence[str] = ("eager", "sequential",
+                                                   "pipelined"),
+                           mesh_sizes: Sequence[int] = ()) -> int:
+    """Embedding-bag lookup/update parity (``apps.embedding_bag``):
+    lookup outputs AND the updated table compared bit-exact against the
+    NumPy oracle in every mode (and on the mesh), plus a property check
+    that ``segment_combine`` matches a naive duplicate-scatter oracle and
+    emits unique in-range destinations (the unique-writer invariant the
+    RMW backend depends on). Returns the number of comparisons made.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.apps import embedding_bag
+
+    n_dev = len(jax.devices())
+    checked = 0
+    for seed in seeds:
+        want = embedding_bag.demo_reference(seed)
+        for mode in modes:
+            got = embedding_bag.demo(seed, mode=mode)
+            _assert_match(f"[embedding seed={seed} {mode}] vs NumPy "
+                          "oracle", got, want, rtol=0, atol=0)
+            checked += 1
+        for ms in mesh_sizes:
+            if ms > n_dev:
+                continue
+            got = embedding_bag.demo(seed, mode="pipelined", mesh=ms)
+            _assert_match(f"[embedding seed={seed} mesh={ms}] vs NumPy "
+                          "oracle", got, want, rtol=0, atol=0)
+            checked += 1
+        # segment_combine vs the naive duplicate-index scatter
+        rng = np.random.default_rng(0xD1_E3 + seed)
+        rows, n, d = 16, 40, 5
+        idx = rng.integers(-4, rows + 4, size=n)
+        vals = rng.integers(0, 8, size=(n, d)).astype(np.float32)
+        dest, summed = embedding_bag.segment_combine(idx, vals,
+                                                     num_rows=rows)
+        got = np.asarray(jnp.zeros((rows, d), jnp.float32).at[dest].add(
+            summed, mode="drop", unique_indices=True))
+        want_t = np.zeros((rows, d), np.float32)
+        for i in range(n):
+            if 0 <= idx[i] < rows:
+                want_t[idx[i]] += vals[i]
+        _assert_match(f"[segment_combine seed={seed}] vs naive scatter",
+                      got, want_t, rtol=0, atol=0)
+        inr = np.asarray(dest)[np.asarray(dest) < rows]
+        if len(inr) != len(set(inr.tolist())):
+            raise ParityError(
+                f"[segment_combine seed={seed}] duplicate in-range "
+                "destinations — unique-writer invariant violated")
+        checked += 1
+    return checked
+
+
 def check_case_parity(case: FuzzCase,
                       configs: Sequence[EngineConfig] = EAGER_CONFIGS,
                       **kw) -> int:
@@ -543,8 +676,10 @@ def check_traffic_parity(trace, service=None, *,
     Expectations per kind (the mixed-window semantics, applied to
     whatever windows the controller happened to cut):
 
-      * gather — the submit-time table snapshot, OOB clamped: bit-exact;
-      * RMW — the end state of *the window that drained the ticket*
+      * gather / kv_decode — the submit-time table snapshot, OOB
+        clamped: bit-exact;
+      * RMW / kv_append — the end state of *the window that drained the
+        ticket*
         (membership recovered from each ``FlushReport.order``), replayed
         sequentially by ``_np_rmw`` from the original table: bit-exact on
         integer tables (the trace default), allclose on float ADD;
@@ -583,7 +718,7 @@ def check_traffic_parity(trace, service=None, *,
     # from the original table (single op per table -> order-free)
     rmw_events: Dict[tuple, list] = {}
     for ev, t in res.tickets:
-        if ev.kind == "rmw":
+        if ev.kind in ("rmw", "kv_append"):
             rmw_events.setdefault((win_of[t.tid], ev.table), []).append(ev)
     end_state = {}
     for (wi, name), evs in rmw_events.items():
@@ -597,14 +732,17 @@ def check_traffic_parity(trace, service=None, *,
     for ev, t in res.tickets:
         got = sched.result(t)
         where = f"[traffic {ev.kind} @{ev.t_us:.0f}us tenant={ev.tenant}]"
-        if ev.kind == "gather":
+        if ev.kind in ("gather", "kv_decode"):
             table = trace.tables[ev.table]
             want = table[np.clip(ev.idx, 0, table.shape[0] - 1)]
             _assert_match(f"{where} {ev.table} vs NumPy oracle", got, want,
                           rtol=0, atol=0)
-        elif ev.kind == "rmw":
+        elif ev.kind in ("rmw", "kv_append"):
             want = end_state[(win_of[t.tid], ev.table)]
-            exact = trace.tables[ev.table].dtype != np.float32
+            # kv_append streams are integer-valued f32 ADDs — exact and
+            # order-free despite the float dtype
+            exact = (trace.tables[ev.table].dtype != np.float32
+                     or ev.kind == "kv_append")
             _assert_match(f"{where} {ev.table}:{ev.op} vs NumPy oracle",
                           got, want, rtol=0 if exact else rtol,
                           atol=0 if exact else atol)

@@ -1,39 +1,41 @@
 """End-to-end app drivers vs their sequential NumPy oracles.
 
-Every app (SpMV power iteration, BFS push, hash-join probe) must be
-**bit-exact** — f32 included, by construction (see ``apps.spmv``) — in
-eager, strictly-sequential and pipelined modes, and pipelined across every
-mesh size the host can form (the CI ``sharded`` job forces 8 devices so
-the full {1, 2, 4, 8} matrix runs there).
+Every app (SpMV power iteration, BFS push, hash-join probe, paged-KV
+decode, embedding bag) must be **bit-exact** — f32 included, by
+construction (see ``apps.spmv``) — in eager, strictly-sequential and
+pipelined modes, and pipelined across every mesh size the host can form
+(the CI ``sharded`` job forces 8 devices so the full {1, 2, 4, 8} matrix
+runs there).
 """
 import numpy as np
 import pytest
 
 import jax
 
-from repro.apps import bfs, hashjoin, spmv
+from repro.apps import APPS, bfs, hashjoin, spmv
 from repro.testing import check_app_parity
 
 MESH_SIZES = tuple(m for m in (1, 2, 4, 8) if m <= len(jax.devices()))
+N_APPS = len(APPS)      # 5: spmv, bfs, hashjoin, kv_serve, embedding_bag
 
 
 def test_app_parity_single_device():
     checked, _ = check_app_parity(
         modes=("eager", "sequential", "pipelined"), seeds=(0,))
-    assert checked == 9     # 3 apps x 3 modes
+    assert checked == 3 * N_APPS     # every app x 3 modes
 
 
 def test_app_parity_mesh():
     checked, ran = check_app_parity(
         modes=(), mesh_sizes=MESH_SIZES, seeds=(0,))
     assert list(ran) == list(MESH_SIZES)
-    assert checked == 3 * len(MESH_SIZES)
+    assert checked == N_APPS * len(MESH_SIZES)
 
 
 @pytest.mark.parametrize("seed", [1, 2])
 def test_app_parity_more_seeds_pipelined(seed):
     checked, _ = check_app_parity(modes=("pipelined",), seeds=(seed,))
-    assert checked == 3
+    assert checked == N_APPS
 
 
 class TestSpmv:

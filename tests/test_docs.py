@@ -1,0 +1,20 @@
+"""Docs stay consistent with the code — the CI `docs` job, in tier-1.
+
+``tools/check_docs.py`` asserts: internal markdown links resolve, every
+``src/repro/apps/*`` module is documented in DESIGN.md, and the
+committed bench snapshots match ``benchmarks/run.py`` registrations
+both ways. Running it here means a broken doc fails locally before CI.
+"""
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "tools"))
+
+import check_docs  # noqa: E402
+
+
+def test_docs_consistent(capsys):
+    rc = check_docs.main([str(REPO)])
+    captured = capsys.readouterr()
+    assert rc == 0, f"check_docs violations:\n{captured.err}"

@@ -1,0 +1,34 @@
+"""Every example under examples/ must actually run.
+
+Each example is executed as ``__main__`` in a subprocess (its own JAX
+process, like a user would run it) and must exit 0. The list is
+discovered from the directory, so a new example is covered the moment it
+lands — and a stale one fails here instead of rotting silently.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+EXAMPLES = sorted((REPO / "examples").glob("*.py"))
+
+
+def test_examples_exist():
+    assert EXAMPLES, "examples/ directory is empty"
+
+
+@pytest.mark.parametrize("path", EXAMPLES, ids=lambda p: p.stem)
+def test_example_runs(path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + str(REPO)
+    proc = subprocess.run(
+        [sys.executable, str(path)], env=env, cwd=REPO,
+        capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, (
+        f"{path.name} exited {proc.returncode}\n"
+        f"--- stdout ---\n{proc.stdout[-2000:]}\n"
+        f"--- stderr ---\n{proc.stderr[-2000:]}")
+    assert proc.stdout.strip(), f"{path.name} printed nothing"

@@ -1,0 +1,174 @@
+"""Paged-KV serving and embedding-bag apps: parity, growth, coalescing.
+
+The generic app matrix (``test_apps.py``) already runs both apps via
+``check_app_parity``; these tests pin the properties specific to the
+serving workloads — mid-flight pool growth (the dynamic-table stress on
+``window_signature``/plan-cache), cross-tenant prefix coalescing, the
+``KvPoolServer`` decode-batch driver, the KV traffic event kinds, and the
+reworked ``models.embedding`` backward.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.apps import embedding_bag, kv_serve
+from repro.testing import (check_embedding_parity, check_kv_parity,
+                           check_traffic_parity)
+
+MESH_SIZES = tuple(m for m in (1, 2, 4) if m <= len(jax.devices()))
+
+
+def test_kv_parity_all_modes_and_growth():
+    # includes the stats["growths"] > 0 and coalescing-gain assertions
+    assert check_kv_parity(seeds=(0, 1), mesh_sizes=MESH_SIZES) > 0
+
+
+def test_embedding_parity_all_modes():
+    assert check_embedding_parity(seeds=(0, 1), mesh_sizes=MESH_SIZES) > 0
+
+
+def test_kv_pool_grows_between_windows():
+    """Growth must happen DURING decode (between flush windows), not just
+    at prefill — that is what exercises the plan cache on a new table
+    extent."""
+    prob = kv_serve.make_problem(0)
+    st = kv_serve._PageState(prob)
+    kv_serve._prefill_streams(prob, st)
+    prefill_growths = st.growths
+    stats = {}
+    kv_serve.run(prob, 6, mode="pipelined", stats_out=stats)
+    assert stats["growths"] > prefill_growths
+
+
+def test_kv_rejects_bad_args():
+    prob = kv_serve.make_problem(0)
+    with pytest.raises(ValueError):
+        kv_serve.run(prob, prob.max_steps + 1)
+    with pytest.raises(ValueError):
+        kv_serve.run(prob, 2, mode="warp")
+
+
+def test_embedding_rejects_bad_mode():
+    with pytest.raises(ValueError):
+        embedding_bag.run(embedding_bag.make_problem(0), mode="warp")
+
+
+def test_segment_combine_empty_and_all_oob():
+    dest, summed = embedding_bag.segment_combine(
+        np.array([-1, 99, -7]), np.ones((3, 2), np.float32), num_rows=8)
+    table = jnp.zeros((8, 2), jnp.float32).at[dest].add(
+        summed, mode="drop", unique_indices=True)
+    assert not np.asarray(table).any()      # stores drop, nothing lands
+
+
+class TestKvPoolServer:
+    def _server(self):
+        from repro.serve import KvPoolServer
+        rng = np.random.default_rng(3)
+        srv = KvPoolServer(page_size=4, d=4, init_pages=4, growth_pages=2)
+        srv.create_prefix(
+            "sys", rng.integers(0, 4, size=(8, 8)).astype(np.float32))
+        for i in range(4):
+            srv.admit(f"s{i}", f"tenant{i % 2}",
+                      rng.integers(0, 4, size=(3, 8)).astype(np.float32),
+                      prefix="sys")
+        return srv, rng
+
+    def test_decode_batch_histories_and_appends(self):
+        srv, rng = self._server()
+        pool0 = np.asarray(srv.pool).copy()
+        seq = srv.seqs["s0"]
+        idx0 = srv._slots(seq.pages, 0, seq.length)
+        new = {f"s{i}": rng.integers(0, 4, size=8).astype(np.float32)
+               for i in range(4)}
+        hists, report = srv.decode_batch(new)
+        # histories are the window-initial pool state
+        np.testing.assert_array_equal(np.asarray(hists["s0"]), pool0[idx0])
+        # appends landed: next window's gather sees them
+        hists2, _ = srv.decode_batch(
+            {"s0": rng.integers(0, 4, size=8).astype(np.float32)})
+        got = np.asarray(hists2["s0"])
+        np.testing.assert_array_equal(got[seq.length - 2], new["s0"])
+
+    def test_shared_prefix_coalesces_across_tenants(self):
+        srv, rng = self._server()
+        _, report = srv.decode_batch(
+            {f"s{i}": rng.integers(0, 4, size=8).astype(np.float32)
+             for i in range(4)})
+        gains = [g for (g, _, _) in report.gather_coalescing.values()]
+        assert any(g > 1.0 for g in gains)
+
+    def test_pool_growth_mid_serving(self):
+        srv, rng = self._server()
+        before = srv.stats()["cap_pages"]
+        for _ in range(8):
+            srv.decode_batch(
+                {f"s{i}": rng.integers(0, 4, size=8).astype(np.float32)
+                 for i in range(4)})
+        st = srv.stats()
+        assert st["cap_pages"] > before and st["growths"] > 0
+        assert st["pool_rows"] == st["cap_pages"] * srv.page_size
+
+    def test_admission_errors(self):
+        srv, rng = self._server()
+        with pytest.raises(ValueError):
+            srv.create_prefix("sys", np.zeros((8, 8), np.float32))
+        with pytest.raises(ValueError):        # not page-aligned
+            srv.create_prefix("odd", np.zeros((3, 8), np.float32))
+        with pytest.raises(ValueError):        # duplicate sequence
+            srv.admit("s0", "tenant0", np.zeros((2, 8), np.float32))
+        with pytest.raises(KeyError):          # unknown prefix
+            srv.admit("s9", "tenant0", np.zeros((2, 8), np.float32),
+                      prefix="nope")
+
+
+class TestKvTraffic:
+    def test_kinds_generated_and_parity(self):
+        from repro.serve.traffic import TrafficConfig, generate_trace
+        tr = generate_trace(TrafficConfig(
+            seed=11, n_events=250, p_kv_decode=0.25, p_kv_append=0.25,
+            kv_pages=12))
+        kinds = tr.summary()["kinds"]
+        assert kinds.get("kv_decode", 0) > 0
+        assert kinds.get("kv_append", 0) > 0
+        checked, _ = check_traffic_parity(tr)
+        assert checked == sum(v for k, v in kinds.items() if k != "tick")
+
+    def test_disabled_kv_leaves_trace_untouched(self):
+        """p_kv_* = 0 must generate the byte-identical trace older
+        configs did — pinned digests (benchmarks/traffic_bench.DIGEST)
+        depend on it."""
+        from repro.serve.traffic import TrafficConfig, generate_trace
+        cfg = TrafficConfig(seed=4, n_events=150)
+        d = generate_trace(cfg).digest()
+        assert "K0" not in generate_trace(cfg).tables
+        assert d == generate_trace(TrafficConfig(
+            seed=4, n_events=150, kv_pages=99, kv_seqs=2)).digest()
+
+
+class TestEmbeddingBackward:
+    def test_segment_combined_matches_naive(self):
+        from repro.models.embedding import embed_lookup, init_embedding
+        table = init_embedding(jax.random.PRNGKey(0), 32, 8)
+        tokens = jnp.asarray(np.random.default_rng(0).integers(
+            0, 32, (4, 6)))
+
+        def loss(tb, bwd):
+            return (embed_lookup(tb, tokens, False, bwd) ** 2).sum()
+
+        g_new = jax.grad(lambda tb: loss(tb, True))(table)
+        g_base = jax.grad(lambda tb: loss(tb, False))(table)
+        np.testing.assert_allclose(np.asarray(g_new), np.asarray(g_base),
+                                   rtol=1e-6, atol=1e-7)
+
+    def test_backward_under_jit_and_dx100_fwd(self):
+        from repro.models.embedding import embed_lookup, init_embedding
+        table = init_embedding(jax.random.PRNGKey(1), 16, 4)
+        tokens = jnp.asarray([[1, 1, 3], [0, 15, 1]])
+        g = jax.jit(jax.grad(
+            lambda tb: embed_lookup(tb, tokens, True, True).sum()))(table)
+        # duplicate token 1 appears 3x -> its row's grad is 3
+        np.testing.assert_allclose(np.asarray(g)[1], 3.0)
+        np.testing.assert_allclose(np.asarray(g)[2], 0.0)

@@ -1,0 +1,109 @@
+"""Docs consistency gate (CI `docs` job; also run by tests/test_docs.py).
+
+Three checks, all pure-stdlib (no jax import — the docs job stays fast
+and install-free):
+
+  1. Internal markdown links in README.md, DESIGN.md and docs/*.md
+     resolve: every relative ``[text](target)`` must point at a file
+     that exists (anchors are stripped; http(s) links are skipped).
+  2. Every app module under ``src/repro/apps/`` is mentioned in
+     DESIGN.md — a new app cannot land undocumented.
+  3. Committed bench snapshots (``benchmarks/snapshots/BENCH_*.json``)
+     and ``benchmarks/run.py`` registrations agree both ways: a
+     registered module without a committed gate snapshot is unguarded,
+     a snapshot without a registration is dead weight that
+     ``benchmarks.compare`` would silently never refresh.
+
+Exit 0 when clean; exit 1 with one line per violation otherwise.
+
+  python tools/check_docs.py [repo_root]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# benchmarks/run.py registers modules as ("name", module) pairs inside
+# main(); the argparse choices tuple lists the same names
+CHOICES_RE = re.compile(r"choices=\(([^)]*)\)", re.DOTALL)
+
+
+def check_links(root: Path, errors: list) -> None:
+    docs = [root / "README.md", root / "DESIGN.md", root / "ROADMAP.md"]
+    docs += sorted((root / "docs").glob("*.md"))
+    for doc in docs:
+        if not doc.exists():
+            errors.append(f"{doc.relative_to(root)}: file missing")
+            continue
+        for m in LINK_RE.finditer(doc.read_text()):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:                  # pure in-page anchor
+                continue
+            resolved = (doc.parent / path).resolve()
+            if not resolved.exists():
+                errors.append(
+                    f"{doc.relative_to(root)}: broken link -> {target}")
+
+
+def check_apps_documented(root: Path, errors: list) -> None:
+    design = (root / "DESIGN.md").read_text()
+    apps_dir = root / "src" / "repro" / "apps"
+    for mod in sorted(apps_dir.glob("*.py")):
+        name = mod.stem
+        if name == "__init__":
+            continue
+        if name not in design:
+            errors.append(
+                f"DESIGN.md: app module src/repro/apps/{name}.py "
+                f"is not mentioned")
+
+
+def check_bench_snapshots(root: Path, errors: list) -> None:
+    run_src = (root / "benchmarks" / "run.py").read_text()
+    m = CHOICES_RE.search(run_src)
+    if not m:
+        errors.append("benchmarks/run.py: cannot find argparse choices")
+        return
+    registered = set(re.findall(r'"([a-z_]+)"', m.group(1)))
+    snaps = {p.stem.removeprefix("BENCH_")
+             for p in (root / "benchmarks" / "snapshots").glob("BENCH_*.json")}
+    for name in sorted(registered - snaps):
+        # locality/tilesize-style sweeps carry no gate rows — only flag
+        # modules that emit gate_ratio rows (grep their source)
+        mod_path = root / "benchmarks" / f"{name}.py"
+        alt = root / "benchmarks" / f"{name}_bench.py"
+        src = (mod_path.read_text() if mod_path.exists() else
+               alt.read_text() if alt.exists() else "")
+        if "gate_ratio" in src:
+            errors.append(
+                f"benchmarks/run.py registers '{name}' (emits gate_ratio "
+                f"rows) but benchmarks/snapshots/BENCH_{name}.json is not "
+                f"committed")
+    for name in sorted(snaps - registered):
+        errors.append(
+            f"benchmarks/snapshots/BENCH_{name}.json has no matching "
+            f"registration in benchmarks/run.py")
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    root = Path(argv[0]).resolve() if argv \
+        else Path(__file__).resolve().parent.parent
+    errors: list = []
+    check_links(root, errors)
+    check_apps_documented(root, errors)
+    check_bench_snapshots(root, errors)
+    for e in errors:
+        print(f"check_docs: {e}", file=sys.stderr)
+    if not errors:
+        print(f"check_docs: OK ({root})")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
