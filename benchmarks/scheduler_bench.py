@@ -98,8 +98,11 @@ def run():
     # (explain() — the exact lowering flush executes) WITHOUT emitting,
     # vs the full batched flush above. Gated machine-independently via
     # gate_ratio = flush/lower: compare.py fails if lowering grows to a
-    # larger fraction of the flush (the <5%-of-flush budget).
-    sched_l = Scheduler(engine=Engine(tile_size=TILE), max_batch=N_PROGS)
+    # larger fraction of the flush than the committed snapshot allows.
+    # verify=True: the gated row includes the structural verifier (the
+    # nightly runs the whole suite with it on — the budgeted config)
+    sched_l = Scheduler(engine=Engine(tile_size=TILE), max_batch=N_PROGS,
+                        verify=True)
 
     def lower_only():
         for i, env in enumerate(envs):
@@ -112,6 +115,40 @@ def run():
     emit("scheduler_plan_overhead", t_lower,
          f"submit+lower {N_PROGS} programs; gate_ratio={t_bat / t_lower:.2f}"
          f" ({100 * t_lower / t_bat:.1f}% of a flush)")
+
+    # verifier cost in isolation: same lowering with verify off —
+    # informational row (no gate_ratio: the committed snapshot would
+    # churn on noise). The hard budget: the verifier's overhead
+    # (on - off, interleaved samples so machine noise cancels) must stay
+    # inside 5% of a flush — the scheduler_plan_overhead gate's budget.
+    # Asserted here so a slow verifier fails loudly even on machines
+    # without a committed snapshot; the row's gate_ratio (vs the
+    # committed snapshot, which includes the verifier) catches slower
+    # drift.
+    sched_v0 = Scheduler(engine=Engine(tile_size=TILE), max_batch=N_PROGS,
+                         verify=False)
+
+    def lower_only_off():
+        for i, env in enumerate(envs):
+            sched_v0.submit(prog, env, regs, tenant=f"core{i}")
+        sched_v0.explain()
+        sched_v0._queue.clear()
+        sched_v0._lowered = None
+
+    t_off = time_fn(lower_only_off, iters=20, warmup=2, agg=min)
+    for _ in range(4):                # interleave: shared noise floor
+        t_off = min(t_off, time_fn(lower_only_off, iters=20, warmup=0,
+                                   agg=min))
+        t_lower = min(t_lower, time_fn(lower_only, iters=20, warmup=0,
+                                       agg=min))
+    overhead = t_lower / t_off - 1.0
+    emit("scheduler_verify_overhead", max(t_lower - t_off, 0.0),
+         f"verify on={t_lower:.0f}us off={t_off:.0f}us "
+         f"({100 * overhead:+.1f}%)")
+    assert t_lower - t_off <= t_bat * 0.05, (
+        f"plan verifier overhead {t_lower - t_off:.0f}us exceeds the "
+        f"5%-of-flush budget ({t_bat * 0.05:.0f}us; on={t_lower:.0f}us "
+        f"off={t_off:.0f}us flush={t_bat:.0f}us)")
 
     # plan-cache effectiveness across the repeated windows timed above
     ph, pm = sched.stats["plan_cache_hits"], sched.stats["plan_cache_misses"]

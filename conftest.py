@@ -2,11 +2,20 @@
 
 ``slow``-marked tests are deselected by default (tier-1 wall-time budget);
 run them with ``pytest --runslow`` or ``-m slow``.
+
+The whole suite runs with the plan-IR structural verifier enabled
+(``DX100_PLAN_VERIFY`` -> ``Scheduler(verify=True)`` ->
+``repro.analysis.verify.check_pass`` after every lowering pass): every
+test that flushes a window is also a verifier test. ``setdefault`` keeps
+an explicit ``DX100_PLAN_VERIFY=0`` override usable.
 """
+import os
 import random
 
 import numpy as np
 import pytest
+
+os.environ.setdefault("DX100_PLAN_VERIFY", "1")
 
 
 def pytest_addoption(parser):

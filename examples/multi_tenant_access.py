@@ -14,14 +14,18 @@ from repro.core import Access, Load, Pattern, Var, compile_pattern
 from repro.serve import AccessService
 
 
+# module level so `tools/dx_lint.py examples/multi_tenant_access.py`
+# statically checks the pattern
+EMB_GATHER = Pattern([Access("LD", "T", Load("B", Var("i")), dtype="f32")],
+                     name="emb_gather")
+
+
 def main():
     rng = np.random.default_rng(0)
     n_cores, tile, rows = 8, 1024, 4096
     table = rng.normal(size=(rows,)).astype(np.float32)   # shared region
 
-    pat = Pattern([Access("LD", "T", Load("B", Var("i")), dtype="f32")],
-                  name="emb_gather")
-    prog, info = compile_pattern(pat, tile_size=tile)
+    prog, info = compile_pattern(EMB_GATHER, tile_size=tile)
 
     svc = AccessService(tile_size=tile, auto_flush=0)     # manual flush
     cores = [svc.connect(f"core{c}") for c in range(n_cores)]

@@ -13,6 +13,20 @@ import jax.numpy as jnp
 from repro.core import (Access, BinOp, Compare, Engine, Load, Pattern,
                         RangeLoop, Var, compile_pattern, run_tiled)
 
+# patterns at module level so `tools/dx_lint.py examples/spatter_gather.py`
+# finds and statically checks them
+XRAGE_SCATTER = Pattern([Access("ST", "A", Load("B", Var("i")),
+                                value=Load("C", Var("i")), dtype="f32")],
+                        name="xrage_scatter")
+UME_GZ = Pattern([Access("RMW", "A", Load("B", Var("i")),
+                         value=Load("V", Var("i")), op="ADD", dtype="f32",
+                         cond=Compare("GE", Load("D", Var("i")), 0.0))],
+                 name="ume_gz")
+NAS_CG = Pattern([Access("LD", "A", Load("B", Var("j")), dtype="f32")],
+                 range_loop=RangeLoop("j", Load("H", Var("i")),
+                                      Load("H", BinOp("ADD", Var("i"), 1))),
+                 name="nas_cg")
+
 
 def spatter_xrage():
     """Spatter XRAGE: A[B[i]] = C[i] (bulk scatter from a trace-like map)."""
@@ -21,9 +35,7 @@ def spatter_xrage():
     A = np.zeros(4096, np.float32)
     B = rng.integers(0, 4096, size=n).astype(np.int32)
     C = rng.normal(size=n).astype(np.float32)
-    pat = Pattern([Access("ST", "A", Load("B", Var("i")),
-                          value=Load("C", Var("i")), dtype="f32")],
-                  name="xrage_scatter")
+    pat = XRAGE_SCATTER
     prog, _ = compile_pattern(pat, tile_size=16384)
     print(f"xrage: compiled to {len(prog.instrs)} DX100 instructions")
     eng = Engine(tile_size=16384)
@@ -45,10 +57,7 @@ def ume_gradient():
     B = rng.integers(0, 2048, size=n).astype(np.int32)
     D = rng.normal(size=n).astype(np.float32)
     V = rng.normal(size=n).astype(np.float32)
-    pat = Pattern([Access("RMW", "A", Load("B", Var("i")),
-                          value=Load("V", Var("i")), op="ADD", dtype="f32",
-                          cond=Compare("GE", Load("D", Var("i")), 0.0))],
-                  name="ume_gz")
+    pat = UME_GZ
     eng = Engine(tile_size=8192)
     env, _, _ = run_tiled(eng, pat, {"A": jnp.asarray(A),
                                      "B": jnp.asarray(B),
@@ -73,10 +82,7 @@ def nas_cg():
     H[1:] = np.cumsum(rng.multinomial(nnz, [1 / rows] * rows))
     B = rng.integers(0, 4096, size=nnz).astype(np.int32)
     A = rng.normal(size=4096).astype(np.float32)
-    pat = Pattern([Access("LD", "A", Load("B", Var("j")), dtype="f32")],
-                  range_loop=RangeLoop("j", Load("H", Var("i")),
-                                       Load("H", BinOp("ADD", Var("i"), 1))),
-                  name="nas_cg")
+    pat = NAS_CG
     eng = Engine(tile_size=32768)
     env, spd, info = run_tiled(eng, pat, {"A": jnp.asarray(A),
                                           "B": jnp.asarray(B),

@@ -1,0 +1,24 @@
+"""dx-verify: static analysis for DX100 programs and the AccessPlan IR.
+
+Three layers (DESIGN.md §12):
+
+  * ``analysis.program``  — interval-domain abstract interpretation of
+    ``AccessProgram``s: per-access index ranges, OOB/def-use/dead-write
+    defects, affine/strided/indirect classification (a coalescing prior
+    for the cost model).
+  * ``analysis.hazards``  — order-dependence detection over one flush
+    window's leaves, emitting the DX0xx diagnostic catalog;
+    ``Scheduler(strict=True)`` raises ``HazardError`` on ERRORs.
+  * ``analysis.verify``   — inter-pass structural invariants of the
+    lowering pipeline, enabled by ``LowerContext(verify=True)`` (the
+    test suite turns it on globally via conftest.py).
+"""
+from repro.analysis.diagnostics import (  # noqa: F401
+    CATALOG, ERROR, WARN, Diagnostic, HazardError, errors, warnings,
+)
+from repro.analysis.hazards import scan_window  # noqa: F401
+from repro.analysis.program import (  # noqa: F401
+    AccessRecord, Interval, ProgramAnalysis, TileState, analyze_program,
+    coalescing_prior,
+)
+from repro.analysis.verify import VerificationError, check_pass  # noqa: F401

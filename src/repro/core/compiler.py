@@ -181,7 +181,13 @@ class _Emitter:
         (indices want i32; stored values want the access dtype).
         """
         if isinstance(e, Var):
-            return self.iter_tile[e.name]
+            try:
+                return self.iter_tile[e.name]
+            except KeyError:
+                raise LegalityError(
+                    f"unknown loop variable {e.name!r}: not an induction "
+                    f"variable of this pattern (known: "
+                    f"{sorted(self.iter_tile)}) [DX001]") from None
         if isinstance(e, Load):
             idx_t = self.lower_expr(e.index, cond_tile, "i32")
             td = self.fresh("ld")

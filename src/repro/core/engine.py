@@ -319,6 +319,9 @@ class Engine:
         env = dict(env)
         spd = dict(spd or {})
         regs = dict(regs or {})
+        # fail fast with a named culprit instead of a KeyError deep in
+        # the instruction loop (dict-key checks only: jit-trace-safe)
+        program.check_inputs(env, regs, spd)
         for ins in program.instrs:
             self._exec(ins, env, spd, regs)
         return env, spd

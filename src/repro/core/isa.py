@@ -22,7 +22,7 @@ Supported, mirroring the paper:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Union
+from typing import Mapping, Optional, Sequence, Union
 
 import jax.numpy as jnp
 
@@ -317,6 +317,11 @@ class AccessProgram:
                         "paper §4.2 Legality)")
             if isinstance(ins, (IST, IRMW, SST)):
                 written_regions.add(ins.base)
+            if isinstance(ins, RNG) and ins.td1 == ins.td2:
+                raise ValueError(
+                    f"illegal program: RNG writes both outer and inner "
+                    f"streams to one tile {ins.td1!r} (duplicate "
+                    "destination — the second write clobbers the first)")
 
     def scratch_tiles(self):
         tiles = []
@@ -325,3 +330,67 @@ class AccessProgram:
                 if t is not None and t not in tiles:
                     tiles.append(t)
         return tiles
+
+    def external_tiles(self):
+        """Tiles read before any instruction defines them — the warm
+        scratchpad state a launch must supply via ``spd``. Accounts for
+        RNG's implicit definitions (``td1 + "__mask"``, ``_rng_total``)."""
+        defined, external = set(), []
+        for ins in self.instrs:
+            for t in ins.uses():
+                if t is not None and t not in defined \
+                        and t not in external:
+                    external.append(t)
+            for t in ins.defs():
+                defined.add(t)
+            if isinstance(ins, RNG):
+                defined.add(ins.td1 + "__mask")
+                defined.add("_rng_total")
+        return tuple(external)
+
+    def regions(self):
+        """Memory region names the program touches, in first-use order."""
+        out = []
+        for ins in self.instrs:
+            base = getattr(ins, "base", None)
+            if base is not None and base not in out:
+                out.append(base)
+        return tuple(out)
+
+    def register_names(self):
+        """Scalar register names (string-valued Reg fields) the program
+        reads, in first-use order."""
+        out = []
+        for ins in self.instrs:
+            for field in ("rs", "rs1", "rs2", "rs3"):
+                r = getattr(ins, field, None)
+                if isinstance(r, str) and r not in out:
+                    out.append(r)
+        return tuple(out)
+
+    def check_inputs(self, env: Mapping, regs: Mapping,
+                     spd: Mapping) -> None:
+        """Validate a launch's inputs upfront with a clear diagnostic.
+
+        Without this, a missing region/register/tile dies deep inside
+        the engine's instruction loop (or the compiler's jit trace) as
+        an opaque ``KeyError``. Shares the DX001 contract with
+        ``repro.analysis.program`` — pure dict-key checks, safe under a
+        jit trace.
+        """
+        missing = [r for r in self.regions() if r not in env]
+        if missing:
+            raise ValueError(
+                f"program {self.name!r}: memory region(s) {missing} not "
+                f"in env (known: {sorted(env)}) [DX001]")
+        missing = [r for r in self.register_names() if r not in regs]
+        if missing:
+            raise ValueError(
+                f"program {self.name!r}: scalar register(s) {missing} "
+                f"not in regs (known: {sorted(regs)}) [DX001]")
+        missing = [t for t in self.external_tiles() if t not in spd]
+        if missing:
+            raise ValueError(
+                f"program {self.name!r}: tile(s) {missing} read before "
+                f"any definition and not supplied via spd (known: "
+                f"{sorted(spd)}) [DX001]")

@@ -39,6 +39,7 @@ package; ``FlushReport.shard_stats`` carries the per-shard record.
 from __future__ import annotations
 
 import dataclasses
+import os
 import weakref
 from collections import OrderedDict
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
@@ -47,6 +48,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import hazards as analysis_hazards
+from repro.analysis.diagnostics import HazardError
 from repro.core import bulk_ops, isa, reorder
 from repro.core.engine import Engine, structural_signature
 from repro.plan import cost as plan_cost
@@ -152,6 +155,8 @@ class FlushReport:
     n_rmws: int = 0
     plan: Optional[plan_nodes.Plan] = dataclasses.field(
         default=None, repr=False)
+    # window hazard diagnostics (analysis.hazards; array-free tuples)
+    diagnostics: Tuple = ()
     _gather_thunk: Optional[object] = dataclasses.field(
         default=None, repr=False)
     _gather_coalescing: Optional[Dict] = dataclasses.field(
@@ -246,15 +251,32 @@ class Scheduler:
       max_batch  : cap on programs fused into one vmap group per flush.
       cost_model : ``repro.plan.CostModel`` override (forced backends,
                    measurement budget); defaults to the standard model.
+      verify     : run the plan-IR structural verifier after every
+                   lowering pass (``repro.analysis.verify``); default
+                   from env ``DX100_PLAN_VERIFY`` (conftest turns it on
+                   suite-wide).
+      strict     : refuse to flush a window carrying ERROR-severity
+                   hazard diagnostics (``HazardError``; queues are left
+                   intact); default from env ``DX100_STRICT_HAZARDS``.
     """
 
     def __init__(self, engine: Optional[Engine] = None, *,
                  tile_size: int = 16384, optimize: bool = True,
                  use_kernel: bool = False, max_batch: int = 32,
-                 cost_model: Optional[plan_cost.CostModel] = None):
+                 cost_model: Optional[plan_cost.CostModel] = None,
+                 verify: Optional[bool] = None,
+                 strict: Optional[bool] = None):
         self.engine = engine if engine is not None else Engine(
             tile_size=tile_size, optimize=optimize, use_kernel=use_kernel)
         self.max_batch = int(max_batch)
+        if verify is None:
+            verify = os.environ.get(
+                "DX100_PLAN_VERIFY", "") not in ("", "0")
+        if strict is None:
+            strict = os.environ.get(
+                "DX100_STRICT_HAZARDS", "") not in ("", "0")
+        self.verify = bool(verify)
+        self.strict = bool(strict)
         self.cost = cost_model if cost_model is not None \
             else plan_cost.CostModel()
         self._queue: List[plan_nodes.ProgramNode] = []
@@ -285,7 +307,9 @@ class Scheduler:
                       "rmws": 0, "vmap_groups": 0, "vmap_fallbacks": 0,
                       "singleton_groups": 0, "group_errors": 0,
                       "plan_cache_hits": 0, "plan_cache_misses": 0,
-                      "rejects": 0, "deferrals": 0}
+                      "rejects": 0, "deferrals": 0,
+                      "hazard_errors": 0, "hazard_warnings": 0,
+                      "hazards_by_tenant": {}}
 
     # -- submission ----------------------------------------------------------
 
@@ -550,10 +574,14 @@ class Scheduler:
         ctx = plan_passes.LowerContext(
             max_batch=self.max_batch, cost=self.cost, engine=self.engine,
             num_shards=int(getattr(self.engine, "num_shards", 1)),
-            sharded_capable=backend.sharded, replay=skeleton)
+            sharded_capable=backend.sharded, replay=skeleton,
+            verify=self.verify)
         plan = plan_passes.lower(leaves, order, ctx, backend)
         plan.signature = signature
         plan.cache_hit = skeleton is not None
+        # hazard scan rides the cached lowering: explain() and the flush
+        # see one scan, and it is O(leaves) by design (analysis.hazards)
+        plan.diagnostics = analysis_hazards.scan_window(plan.leaves)
         if leaves and skeleton is None:
             self._plan_cache[signature] = plan_passes.skeleton_of(plan)
             while len(self._plan_cache) > PLAN_CACHE_SIZE:
@@ -641,6 +669,13 @@ class Scheduler:
             handle = FlushHandle(report, ())
             self._inflight = weakref.ref(handle)
             return handle
+        if self.strict:
+            errs = [d for d in plan.diagnostics if d.severity == "ERROR"]
+            if errs:
+                # refuse BEFORE any queue mutation: the window stays
+                # pending, so the caller can explain() the offending
+                # plan, drop submissions, or re-flush non-strict
+                raise HazardError(errs)
         deferred = self._lowered[2] if self._lowered is not None else None
         if deferred is None:
             self._queue, self._gather_queue, self._rmw_queue = [], [], []
@@ -678,6 +713,15 @@ class Scheduler:
         self.stats["programs"] += counts["programs"]
         self.stats["gathers"] += counts["gathers"]
         self.stats["rmws"] += counts["rmws"]
+        for d in plan.diagnostics:
+            bucket = ("hazard_errors" if d.severity == "ERROR"
+                      else "hazard_warnings")
+            self.stats[bucket] += 1
+            for tenant in d.tenants:
+                per = self.stats["hazards_by_tenant"].setdefault(
+                    tenant, {"errors": 0, "warnings": 0})
+                per["errors" if d.severity == "ERROR"
+                    else "warnings"] += 1
 
         gather_streams = {g.table_id: tuple(g.streams)
                           for g in plan.fused("gather")}
@@ -691,6 +735,7 @@ class Scheduler:
             shard_stats=ctx.shard_stats,
             n_rmws=counts["rmws"],
             plan=plan,
+            diagnostics=plan.diagnostics,
             _gather_thunk=(lambda s=gather_streams: {
                 k: reorder.cross_stream_gain(v) for k, v in s.items()}),
             _rmw_thunk=(lambda s=rmw_streams: {

@@ -50,6 +50,19 @@ class CostModel:
     # measured coalescing factor below which a lone stream skips the
     # coalesce machinery entirely
     eager_factor_cutoff: float = 1.05
+    # static coalescing priors by table id, fed by the analyzer's
+    # affine/strided classification (repro.analysis.program): consulted
+    # only for a lone stream the measurement could not cover
+    priors: dict = dataclasses.field(default_factory=dict)
+
+    def set_coalescing_prior(self, table_id: int, factor: float) -> None:
+        """Record a statically-inferred coalescing factor for a table's
+        index streams (e.g. 1.0 for affine/strided accesses — see
+        ``repro.analysis.program.coalescing_prior``). Priors only ever
+        steer path selection for unmeasured lone streams; gathers are
+        bit-exact on either path, so a wrong prior costs performance,
+        never correctness."""
+        self.priors[table_id] = float(factor)
 
     def __post_init__(self):
         for v, legal in ((self.force_gather, GATHER_BACKENDS),
@@ -84,6 +97,13 @@ class CostModel:
             # always-coalesce default — dropping dedup on unknown data
             # would forfeit the row reuse this engine exists for.
             return "eager", factor
+        if factor is None and len(node.streams) <= 1:
+            # no measurement — fall back to a static prior if the
+            # analyzer classified this table's index streams (affine/
+            # strided => factor 1.0, nothing to dedup)
+            prior = self.priors.get(node.table_id)
+            if prior is not None and prior <= self.eager_factor_cutoff:
+                return "eager", None
         return "coalesce", factor
 
     def gather_backend(self, node, ctx) -> str:

@@ -13,9 +13,10 @@ import dataclasses
 from repro.plan import nodes
 
 
-def explain(obj) -> "Explanation":
+def explain(obj, *, diagnostics: bool = True) -> "Explanation":
     """Explanation for a ``Plan``, ``FlushReport`` (``.plan``), or
-    ``FlushHandle`` (``.report.plan``)."""
+    ``FlushHandle`` (``.report.plan``). ``diagnostics=False`` omits the
+    window hazard section from ``render()``."""
     plan = obj
     if hasattr(plan, "report"):            # FlushHandle
         plan = plan.report
@@ -24,7 +25,7 @@ def explain(obj) -> "Explanation":
     if not isinstance(plan, nodes.Plan):
         raise TypeError(f"cannot explain {type(obj).__name__}: expected "
                         "a Plan, FlushReport or FlushHandle")
-    return Explanation(plan)
+    return Explanation(plan, show_diagnostics=diagnostics)
 
 
 def _leaf_line(leaf: nodes.PlanNode) -> str:
@@ -74,6 +75,7 @@ def _root_lines(root: nodes.PlanNode) -> list:
 class Explanation:
     """Renderable view of one lowered flush window."""
     plan: nodes.Plan
+    show_diagnostics: bool = True
 
     @property
     def passes(self):
@@ -83,7 +85,11 @@ class Explanation:
     def node_ids(self) -> tuple:
         return self.plan.node_ids()
 
-    def render(self) -> str:
+    @property
+    def diagnostics(self) -> tuple:
+        return tuple(self.plan.diagnostics)
+
+    def render(self, diagnostics: bool = None) -> str:
         p = self.plan
         c = p.counts()
         head = (f"AccessPlan[backend={p.backend} "
@@ -101,6 +107,11 @@ class Explanation:
         lines.append("plan:")
         for root in p.roots:
             lines.extend("  " + ln for ln in _root_lines(root))
+        show = self.show_diagnostics if diagnostics is None else diagnostics
+        if show and p.diagnostics:
+            lines.append("diagnostics:")
+            for d in p.diagnostics:
+                lines.append("  " + d.render())
         return "\n".join(lines)
 
     def __str__(self) -> str:

@@ -259,6 +259,9 @@ class Plan:
     cache_hit: bool = False
     backend: str = "local"
     executed: bool = False
+    # window hazard diagnostics (repro.analysis.hazards.scan_window):
+    # array-free Diagnostic tuples, so they survive strip()
+    diagnostics: Tuple = ()
 
     def nodes(self):
         """Every node: leaves, roots and sharded inners."""

@@ -72,6 +72,9 @@ class LowerContext:
     num_shards: int = 1
     sharded_capable: bool = False
     replay: Optional[Skeleton] = None
+    # run repro.analysis.verify.check_pass after every pass (conftest
+    # turns this on suite-wide via DX100_PLAN_VERIFY)
+    verify: bool = False
     _next_nid: int = 0
 
     def nid(self) -> int:
@@ -347,8 +350,12 @@ def lower(leaves, order, ctx: LowerContext, backend) -> nodes.Plan:
     """Run the backend's pass table over a fresh plan of ``leaves``."""
     plan = nodes.Plan(leaves=tuple(leaves), order=tuple(order),
                       backend=backend.name)
+    if ctx.verify:
+        from repro.analysis import verify as _verify
     for name in PIPELINE:
         plan = backend.passes[name](plan, ctx)
+        if ctx.verify:
+            _verify.check_pass(plan, name, ctx)
     return plan
 
 

@@ -349,6 +349,7 @@ class AccessService:
         self.last_report = handle.report
         self.telemetry.on_flush(handle.report.order, t0, max(t1, t0),
                                 pending_before=pending)
+        self.telemetry.on_diagnostics(handle.report.diagnostics)
         if self.controller is not None:
             self.controller.observe_flush(
                 len(handle.report.order), t1 - t0, handle.report, t1,

@@ -73,6 +73,11 @@ class Telemetry:
         self._t_last: Optional[float] = None
         self.n_submits = 0
         self.n_completed = 0
+        # hazard diagnostics (analysis.hazards via on_diagnostics)
+        self._diag_by_code: Dict[str, int] = {}
+        self._diag_by_tenant: Dict[str, Dict[str, int]] = {}
+        self.n_diag_errors = 0
+        self.n_diag_warnings = 0
 
     # -- event feed ----------------------------------------------------------
 
@@ -118,6 +123,23 @@ class Telemetry:
             self.n_completed += 1
             if self._t_last is None or t_done > self._t_last:
                 self._t_last = t_done
+
+    def on_diagnostics(self, diagnostics) -> None:
+        """Count one window's hazard diagnostics
+        (``FlushReport.diagnostics`` — analysis.hazards DX0xx codes),
+        per code, severity and involved tenant."""
+        for d in diagnostics:
+            self._diag_by_code[d.code] = \
+                self._diag_by_code.get(d.code, 0) + 1
+            if d.severity == "ERROR":
+                self.n_diag_errors += 1
+            else:
+                self.n_diag_warnings += 1
+            for tenant in d.tenants:
+                per = self._diag_by_tenant.setdefault(
+                    tenant, {"errors": 0, "warnings": 0})
+                per["errors" if d.severity == "ERROR"
+                    else "warnings"] += 1
 
     # -- folding -------------------------------------------------------------
 
@@ -179,6 +201,13 @@ class Telemetry:
                 "max_depth": max(self._depths, default=0),
                 "depth_hist": self.depth_histogram(),
             },
+            "diagnostics": {
+                "errors": self.n_diag_errors,
+                "warnings": self.n_diag_warnings,
+                "by_code": dict(sorted(self._diag_by_code.items())),
+                "by_tenant": {t: dict(v) for t, v in
+                              sorted(self._diag_by_tenant.items())},
+            },
         }
 
     def render(self, *, top: int = 8) -> str:
@@ -196,6 +225,11 @@ class Telemetry:
             f"{w['mean_depth']:.1f}, max {w['max_depth']}, "
             f"hist {w['depth_hist']}",
         ]
+        dg = s["diagnostics"]
+        if dg["errors"] or dg["warnings"]:
+            lines.append(
+                f"hazards: {dg['errors']} errors, {dg['warnings']} "
+                f"warnings, by code {dg['by_code']}")
         rows = sorted(((t, r) for t, r in s["tenants"].items() if r["n"]),
                       key=lambda e: -e[1]["p99_us"])[:top]
         if rows:

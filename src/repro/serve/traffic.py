@@ -412,6 +412,7 @@ def replay_trace(trace: Trace, service, *,
         end = start + d
         server_free = end
         tel.on_flush(rep.order, start, end, pending_before=pending)
+        tel.on_diagnostics(rep.diagnostics)
         if ctl is not None:
             ctl.observe_flush(len(rep.order), d, rep, end,
                               pending_after=sched.pending)

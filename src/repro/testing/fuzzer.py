@@ -219,6 +219,11 @@ class MixedFlushCase:
     rmws: list                # (table_name, idx, values, cond-or-None)
     tables: Dict[str, np.ndarray]
     table_ops: Dict[str, str]   # RMW table -> its single op
+    # set by ``mutate_case``: one extra hazardous submission, either
+    # ("gather", table, idx) or ("rmw", table, idx, vals, op) — kept out
+    # of ``gathers``/``rmws`` so parity replay of the base case is
+    # unaffected and the driver controls when the hazard lands
+    injected: tuple = ()
 
 
 def generate_mixed_case(seed: int) -> MixedFlushCase:
@@ -290,6 +295,50 @@ def generate_mixed_case(seed: int) -> MixedFlushCase:
     return MixedFlushCase(name=f"mixed{seed}", seed=seed,
                           programs=programs, gathers=gathers, rmws=rmws,
                           tables=tables, table_ops=table_ops)
+
+
+def mutate_case(case: MixedFlushCase, kind: str, seed: int = 0
+                ) -> MixedFlushCase:
+    """Inject a *known* order-dependent hazard into a legal mixed case.
+
+    The returned case is a structural copy of ``case`` with one extra
+    submission that makes the window order-dependent — the
+    true-positive corpus for ``repro.analysis.hazards`` (every mutant
+    must be flagged; the unmutated corpus must stay ERROR-clean).
+
+      mixed_op        : second RMW op on an existing R table (DX010)
+      gather_rmw_race : gather against an R table that is also RMW-
+                        updated in the window (DX011)
+    """
+    rng = np.random.default_rng(0xBAD + seed)
+    tables = dict(case.tables)
+    table_ops = dict(case.table_ops)
+    rmws = list(case.rmws)
+    # mutate the first R table that actually receives an RMW this window
+    name = next((n for n, _, _, _ in rmws), None)
+    if name is None:        # no RMW traffic: conjure a table + baseline op
+        name = "Rmut"
+        tables[name] = rng.integers(0, 2 ** 12, size=(64,)).astype(np.int32)
+        table_ops[name] = "ADD"
+        rmws.append((name, rng.integers(0, 64, size=16).astype(np.int32),
+                     rng.integers(0, 8, size=16).astype(np.int32), None))
+    table = tables[name]
+    idx = rng.integers(0, table.shape[0], size=16).astype(np.int32)
+    if kind == "gather_rmw_race":
+        injected = ("gather", name, idx)
+    elif kind == "mixed_op":
+        pool = (("MIN", "MAX") if table.dtype == np.float32
+                else isa.RMW_OPS)
+        new_op = next(o for o in pool if o != table_ops[name])
+        vals = (rng.normal(size=16).astype(np.float32)
+                if table.dtype == np.float32
+                else rng.integers(0, 8, size=16).astype(table.dtype))
+        injected = ("rmw", name, idx, vals, new_op)
+    else:
+        raise ValueError(f"unknown mutation kind {kind!r}")
+    return dataclasses.replace(
+        case, name=f"{case.name}+{kind}", rmws=rmws, tables=tables,
+        table_ops=table_ops, injected=injected)
 
 
 def generate_case(seed: int) -> FuzzCase:

@@ -98,6 +98,18 @@ class OracleEngine:
 
     def __init__(self, tile_size: int = 16384):
         self.tile_size = int(tile_size)
+        # index recorder for the analyzer soundness property
+        # (tests/test_analysis.py): set to {} before run() to collect,
+        # per instruction position, every index/address the oracle
+        # executes (pre-clip / pre-OOB-drop) — exactly the values the
+        # interval analyzer must bound.
+        self.touched: Optional[Dict[int, list]] = None
+        self._ip = -1
+
+    def _touch(self, vals) -> None:
+        if self.touched is not None:
+            self.touched.setdefault(self._ip, []).append(
+                np.asarray(vals, dtype=np.int64).reshape(-1))
 
     @staticmethod
     def _reg(regs: Mapping, r):
@@ -119,6 +131,7 @@ class OracleEngine:
             base = env[ins.base]
             i = np.arange(ts, dtype=np.int32)
             addr = np.int32(start) + i * np.int32(stride)
+            self._touch(addr)
             vals = base[np.clip(addr, 0, base.shape[0] - 1)]
             vals = vals.astype(NP_DTYPES[ins.dtype])
             cond = self._cond(spd, ins.tc)
@@ -138,6 +151,7 @@ class OracleEngine:
                 if cond is not None and not cond[i]:
                     continue
                 a = start + i * stride
+                self._touch([a])
                 if 0 <= a < n:
                     base[a] = vals[i]
         elif isinstance(ins, isa.ILD):
@@ -145,6 +159,7 @@ class OracleEngine:
             idx = spd[ins.ts1].astype(np.int32)
             if cond is not None:
                 idx = np.where(cond, idx, 0)
+            self._touch(idx)           # post-mask, pre-clip
             base = env[ins.base]
             out = base[np.clip(idx, 0, base.shape[0] - 1)]
             if cond is not None:
@@ -160,6 +175,7 @@ class OracleEngine:
             n = base.shape[0]
             lanes = (np.flatnonzero(cond) if cond is not None
                      else range(idx.shape[0]))
+            self._touch(idx[lanes] if cond is not None else idx)
             for i in lanes:                 # sequential: last write wins
                 a = int(idx[i])
                 if 0 <= a < n:
@@ -172,6 +188,7 @@ class OracleEngine:
             n = base.shape[0]
             lanes = (np.flatnonzero(cond) if cond is not None
                      else range(idx.shape[0]))
+            self._touch(idx[lanes] if cond is not None else idx)
             for i in lanes:
                 a = int(idx[i])
                 if 0 <= a < n:
@@ -227,7 +244,8 @@ class OracleEngine:
         env = {k: _to_np(v) for k, v in env.items()}
         spd = {k: _to_np(v) for k, v in (spd or {}).items()}
         regs = dict(regs or {})
-        for ins in program.instrs:
+        program.check_inputs(env, regs, spd)   # same contract as Engine
+        for self._ip, ins in enumerate(program.instrs):
             self._exec(ins, env, spd, regs)
         return env, spd
 

@@ -1,0 +1,518 @@
+"""Tests for ``repro.analysis``: interval-domain program analysis
+(soundness vs the NumPy oracle over the fuzz corpus), window hazard
+detection (100% catch on mutated corpora, zero ERROR false positives on
+the legal corpus), strict-mode refusal, the plan-IR structural verifier,
+launch-input validation, and the analyzer -> cost-model prior wiring."""
+import numpy as np
+import pytest
+
+from repro.analysis import (CATALOG, ERROR, WARN, Diagnostic, HazardError,
+                            Interval, VerificationError, analyze_program,
+                            check_pass, coalescing_prior, scan_window)
+from repro.analysis import program as aprog
+from repro.core import (Access, BinOp, Engine, Load, Pattern, Scheduler,
+                        Var, compile_pattern)
+from repro.core import compiler, isa
+from repro.plan import CostModel
+from repro.plan.explain import explain
+from repro.serve.telemetry import Telemetry
+from repro.testing import fuzzer, oracle
+
+TILE = 64
+
+SOUNDNESS_SEEDS = range(24)
+MIXED_CLEAN_SEEDS = range(6)
+MUTATION_SEEDS = range(10)
+
+
+# ---------------------------------------------------------------------------
+# interval domain unit tests
+# ---------------------------------------------------------------------------
+
+class TestIntervalDomain:
+    def test_add_sub_corners(self):
+        a, b = Interval(1, 4), Interval(-2, 3)
+        assert aprog.binop("ADD", a, b) == Interval(-1, 7)
+        assert aprog.binop("SUB", a, b) == Interval(-2, 6)
+
+    def test_mul_corners_cover_sign_flip(self):
+        got = aprog.binop("MUL", Interval(-2, 3), Interval(-5, 4))
+        assert got == Interval(-15, 12)
+
+    def test_i32_wrap_widens_to_full_range(self):
+        big = Interval(2**31 - 10, 2**31 - 1)
+        got = aprog.binop("ADD", big, Interval(5, 20), ("i32",), "i32")
+        assert got == aprog.from_dtype("i32")
+
+    def test_and_nonneg_bound(self):
+        got = aprog.binop("AND", Interval(0, 1000), Interval(0, 63))
+        assert got.lo == 0 and got.hi == 63
+
+    def test_shr_shifts_down(self):
+        got = aprog.binop("SHR", Interval(0, 1024), Interval(2, 2))
+        assert got == Interval(0, 256)
+
+    def test_min_clamps(self):
+        got = aprog.binop("MIN", Interval(0, 10**6), Interval(63, 63))
+        assert got.hi == 63
+
+    def test_compare_is_boolean(self):
+        assert aprog.binop("LT", aprog.TOP, aprog.TOP) == Interval(0, 1)
+
+    def test_cast_truncates_in_range(self):
+        assert aprog.cast_to(Interval(1.7, 3.9), "i32") == Interval(1, 3)
+
+    def test_cast_out_of_range_widens(self):
+        assert aprog.cast_to(Interval(0, 2**40), "i32") \
+            == aprog.from_dtype("i32")
+
+    def test_float_widening_contains_rounding(self):
+        got = aprog.binop("ADD", Interval(0.1, 0.1), Interval(0.2, 0.2),
+                          (), "f32")
+        assert got.contains(np.float32(0.1) + np.float32(0.2))
+
+
+# ---------------------------------------------------------------------------
+# analyzer soundness vs the ISA oracle (fuzz corpus)
+# ---------------------------------------------------------------------------
+
+def _assert_sound_on_case(case, tile_size=TILE):
+    """Every index the oracle touches must fall inside the analyzer's
+    inferred interval for that instruction — checked per tile, against
+    the env state the tile actually sees."""
+    prog, _ = compiler.compile_pattern(case.pattern, tile_size=tile_size)
+    eng = oracle.OracleEngine(tile_size=tile_size)
+    env = {k: np.asarray(v) for k, v in case.env.items()}
+    env["__iota__"] = np.arange(
+        compiler._round_up(case.n, tile_size), dtype=np.int32)
+    n_checked = 0
+    for base in range(0, case.n, tile_size):
+        count = min(tile_size, case.n - base)
+        regs = {"tile_base": base, "N": count, "tile_end": base + count}
+        analysis = analyze_program(prog, env=env, regs=regs,
+                                   externals=frozenset())
+        assert not analysis.errors(), \
+            f"{case.name}: false-positive ERRORs {analysis.errors()}"
+        by_ip = analysis.by_ip
+        eng.touched = {}
+        env, _ = eng.run(prog, env, regs)
+        for ip, batches in eng.touched.items():
+            rec = by_ip[ip]
+            touched = np.concatenate(batches)
+            if touched.size == 0:      # all lanes masked / empty ranges
+                continue
+            lo, hi = touched.min(), touched.max()
+            assert rec.index.contains(lo) and rec.index.contains(hi), (
+                f"{case.name} ip{ip} {rec.kind} {rec.base}: oracle "
+                f"touched [{lo}, {hi}] outside inferred {rec.index}")
+            n_checked += len(batches)
+    assert n_checked > 0
+
+
+class TestAnalyzerSoundness:
+    @pytest.mark.parametrize("seed", SOUNDNESS_SEEDS)
+    def test_inferred_intervals_contain_oracle_indices(self, seed):
+        _assert_sound_on_case(fuzzer.generate_case(seed))
+
+    def test_hypothesis_soundness(self):
+        hyp = pytest.importorskip("hypothesis")
+        from hypothesis import strategies as st
+
+        @hyp.given(st.integers(min_value=0, max_value=2**16))
+        @hyp.settings(max_examples=25, deadline=None)
+        def run(seed):
+            _assert_sound_on_case(fuzzer.generate_case(seed))
+
+        run()
+
+    def test_classification_gather_chain(self):
+        # compiled A[B[i]]: the B load is indexed by the affine iota tile,
+        # the A load by data loaded from memory
+        prog, _ = compile_pattern(Pattern(
+            [Access("LD", "A", Load("B", Var("i")), dtype="f32")],
+            name="g"), tile_size=TILE)
+        analysis = analyze_program(prog)
+        ilds = [a for a in analysis.accesses if a.kind == "ILD"]
+        assert [a.classification for a in ilds] == ["affine", "indirect"]
+        slds = [a for a in analysis.accesses if a.kind == "SLD"]
+        assert slds and all(a.classification == "strided" for a in slds)
+
+    def test_coalescing_prior_values(self):
+        assert coalescing_prior("affine") == 1.0
+        assert coalescing_prior("strided") == 1.0
+        assert coalescing_prior("indirect") is None
+
+    def test_guaranteed_oob_flagged(self):
+        # unconditional gather whose index-region content is entirely
+        # past the target region's rows (conditions would hull with 0)
+        prog = isa.AccessProgram((
+            isa.SLD("i32", "B", "%i", rs1="z", rs2="n", rs3=1),
+            isa.ILD("f32", "A", "%o", "%i"),
+        ), tile_size=TILE, name="oob")
+        env = {"A": np.zeros(8, np.float32),
+               "B": np.full(TILE, 100, np.int32)}
+        analysis = analyze_program(prog, env=env, regs={"z": 0, "n": TILE})
+        oob = [a for a in analysis.accesses if a.oob]
+        assert oob and oob[0].base == "A"
+        assert any(d.code == "DX003" and d.severity == WARN
+                   for d in analysis.diagnostics)
+
+    def test_dead_tile_write_flagged(self):
+        prog = isa.AccessProgram((
+            isa.SLD("i32", "__iota__", "%t", rs1="tile_base", rs2="N",
+                    rs3=1),
+            isa.SLD("i32", "__iota__", "%t", rs1="tile_base", rs2="N",
+                    rs3=1),
+            isa.IST("i32", "OUT", "%t", "%t"),
+        ), tile_size=TILE, name="dead")
+        analysis = analyze_program(prog)
+        assert any(d.code == "DX002" for d in analysis.diagnostics)
+
+    def test_undefined_tile_flagged_with_contract(self):
+        prog = isa.AccessProgram((
+            isa.ILD("f32", "A", "%o", "%missing"),
+        ), tile_size=TILE, name="undef")
+        # no externals contract -> assumed warm scratchpad, no DX001
+        assert not analyze_program(prog).errors()
+        analysis = analyze_program(prog, externals=frozenset())
+        assert any(d.code == "DX001" and d.severity == ERROR
+                   for d in analysis.errors())
+
+
+# ---------------------------------------------------------------------------
+# window hazard detection: clean corpus + mutation catch
+# ---------------------------------------------------------------------------
+
+def _replay_window(case, *, strict=False, submit_injected=True):
+    """Submit a MixedFlushCase's raw traffic (plus any injected mutant
+    submission) into one window; return (sched, report-or-None)."""
+    sched = Scheduler(engine=Engine(tile_size=TILE), strict=strict)
+    for name, idx in case.gathers:
+        sched.submit_gather(case.tables[name], idx, tenant="tg")
+    for name, idx, vals, cond in case.rmws:
+        sched.submit_rmw(case.tables[name], idx, vals,
+                         op=case.table_ops[name], cond=cond, tenant="tr")
+    if submit_injected and case.injected:
+        if case.injected[0] == "gather":
+            _, name, idx = case.injected
+            sched.submit_gather(case.tables[name], idx, tenant="evil")
+        else:
+            _, name, idx, vals, op = case.injected
+            sched.submit_rmw(case.tables[name], idx, vals, op=op,
+                             tenant="evil")
+    return sched, sched.flush()
+
+
+class TestHazardDetection:
+    @pytest.mark.parametrize("seed", MIXED_CLEAN_SEEDS)
+    def test_legal_mixed_corpus_is_error_clean(self, seed):
+        case = fuzzer.generate_mixed_case(seed)
+        _, report = _replay_window(case)
+        errs = [d for d in report.diagnostics if d.severity == ERROR]
+        assert not errs, f"false-positive ERRORs on legal window: {errs}"
+
+    @pytest.mark.parametrize("seed", MUTATION_SEEDS)
+    @pytest.mark.parametrize("kind,code", [("mixed_op", "DX010"),
+                                           ("gather_rmw_race", "DX011")])
+    def test_injected_hazards_all_caught(self, seed, kind, code):
+        case = fuzzer.mutate_case(fuzzer.generate_mixed_case(seed), kind,
+                                  seed=seed)
+        _, report = _replay_window(case)
+        codes = {d.code for d in report.diagnostics}
+        assert code in codes, (
+            f"{case.name}: injected {kind} not caught (got {codes})")
+        sev = {d.code: d.severity for d in report.diagnostics}
+        assert sev[code] == CATALOG[code][0]
+
+    def test_committed_kv_trace_is_error_clean(self):
+        # paged-KV serving shares the pool table between decode gathers
+        # and append RMWs: DX011 must stay WARN (defined snapshot
+        # semantics) and the trace must carry zero ERRORs
+        import pathlib
+
+        from repro.serve import AccessService
+        from repro.serve.traffic import Trace, replay_trace
+        path = pathlib.Path(__file__).parent / "data" / "trace_kv.json"
+        trace = Trace.from_json(path.read_text())
+        svc = AccessService(tile_size=TILE, auto_flush=0)
+        replay_trace(trace, svc, service_time=lambda depth, rep: 10.0)
+        svc.flush()
+        d = svc.telemetry.summary()["diagnostics"]
+        assert d["errors"] == 0
+        assert d["by_code"].get("DX011", 0) > 0
+
+    def test_float_add_rmw_warns(self):
+        sched = Scheduler(engine=Engine(tile_size=TILE))
+        table = np.zeros(16, np.float32)
+        sched.submit_rmw(table, np.arange(8, dtype=np.int32),
+                         np.ones(8, np.float32), op="ADD")
+        report = sched.flush()
+        assert any(d.code == "DX020" and d.severity == WARN
+                   for d in report.diagnostics)
+
+    def test_duplicate_program_writers_error(self, ):
+        # two structurally DIFFERENT launches storing into one array
+        out = np.zeros(32, np.float32)
+        pa = Pattern([Access("ST", "OUT", Load("B", Var("i")),
+                             value=Load("V", Var("i")), dtype="f32")],
+                     name="a")
+        pb = Pattern([Access("ST", "OUT",
+                             BinOp("MIN", Load("B", Var("i")), 31),
+                             value=Load("V", Var("i")), dtype="f32")],
+                     name="b")
+        # strict=False pinned: this window is DX012 ERROR by design and
+        # must still execute under the nightly's DX100_STRICT_HAZARDS=1
+        sched = Scheduler(engine=Engine(tile_size=TILE), strict=False)
+        rng = np.random.default_rng(0)
+        for p, tenant in ((pa, "t1"), (pb, "t2")):
+            prog, _ = compile_pattern(p, tile_size=TILE)
+            env = {"OUT": out,
+                   "B": rng.integers(0, 32, TILE).astype(np.int32),
+                   "V": rng.normal(size=TILE).astype(np.float32),
+                   "__iota__": np.arange(TILE, dtype=np.int32)}
+            sched.submit(prog, env,
+                         {"tile_base": 0, "N": TILE, "tile_end": TILE},
+                         tenant=tenant)
+        report = sched.flush()
+        assert any(d.code == "DX012" and d.severity == ERROR
+                   for d in report.diagnostics)
+
+    def test_tiled_same_program_writers_exempt(self):
+        # the run_tiled idiom: same program launched per tile over one
+        # output array — same group key, ordered by the batch pass
+        out = np.zeros(32, np.float32)
+        p = Pattern([Access("ST", "OUT", Load("B", Var("i")),
+                            value=Load("V", Var("i")), dtype="f32")],
+                    name="t")
+        prog, _ = compile_pattern(p, tile_size=TILE)
+        rng = np.random.default_rng(0)
+        env = {"OUT": out,
+               "B": rng.integers(0, 32, TILE).astype(np.int32),
+               "V": rng.normal(size=TILE).astype(np.float32),
+               "__iota__": np.arange(2 * TILE, dtype=np.int32)}
+        sched = Scheduler(engine=Engine(tile_size=TILE))
+        for base in (0, TILE):
+            sched.submit(prog, env, {"tile_base": base, "N": TILE,
+                                     "tile_end": base + TILE})
+        report = sched.flush()
+        codes = {d.code for d in report.diagnostics}
+        assert "DX012" not in codes and "DX013" not in codes
+
+    def test_program_write_vs_raw_gather_warns(self):
+        out = np.zeros(32, np.float32)
+        p = Pattern([Access("ST", "OUT", Load("B", Var("i")),
+                            value=Load("V", Var("i")), dtype="f32")],
+                    name="w")
+        prog, _ = compile_pattern(p, tile_size=TILE)
+        rng = np.random.default_rng(0)
+        env = {"OUT": out,
+               "B": rng.integers(0, 32, TILE).astype(np.int32),
+               "V": rng.normal(size=TILE).astype(np.float32),
+               "__iota__": np.arange(TILE, dtype=np.int32)}
+        sched = Scheduler(engine=Engine(tile_size=TILE))
+        sched.submit(prog, env,
+                     {"tile_base": 0, "N": TILE, "tile_end": TILE})
+        sched.submit_gather(out, np.arange(8, dtype=np.int32))
+        report = sched.flush()
+        assert any(d.code == "DX013" and d.severity == WARN
+                   for d in report.diagnostics)
+
+
+# ---------------------------------------------------------------------------
+# strict mode + counters + rendering
+# ---------------------------------------------------------------------------
+
+class TestStrictModeAndSurfacing:
+    def _hazard_window(self, strict):
+        sched = Scheduler(engine=Engine(tile_size=TILE), strict=strict)
+        table = np.zeros(16, np.int32)
+        sched.submit_rmw(table, np.arange(4, dtype=np.int32),
+                         np.ones(4, np.int32), op="ADD", tenant="a")
+        sched.submit_rmw(table, np.arange(4, dtype=np.int32),
+                         np.ones(4, np.int32), op="MAX", tenant="b")
+        return sched
+
+    def test_strict_refuses_window_and_keeps_queues(self):
+        sched = self._hazard_window(strict=True)
+        with pytest.raises(HazardError, match="DX010") as ei:
+            sched.flush()
+        assert any(d.code == "DX010" for d in ei.value.diagnostics)
+        # the window was refused, not consumed: relax and re-flush
+        sched.strict = False
+        report = sched.flush()
+        assert any(d.code == "DX010" for d in report.diagnostics)
+
+    def test_counters_and_tenant_attribution(self):
+        sched = self._hazard_window(strict=False)
+        sched.flush()
+        assert sched.stats["hazard_errors"] >= 1
+        by_tenant = sched.stats["hazards_by_tenant"]
+        assert "a" in by_tenant and "b" in by_tenant
+
+    def test_explain_renders_diagnostics_section(self):
+        sched = self._hazard_window(strict=False)
+        report = sched.flush()
+        text = str(explain(report.plan))
+        assert "diagnostics:" in text and "DX010" in text
+        assert "DX010" not in str(explain(report.plan, diagnostics=False))
+
+    def test_scan_window_on_empty_is_clean(self):
+        assert scan_window(()) == ()
+
+    def test_telemetry_diagnostics_section(self):
+        tel = Telemetry()
+        tel.on_diagnostics((
+            Diagnostic("DX010", ERROR, "m", tenants=("a",)),
+            Diagnostic("DX020", WARN, "m", tenants=("a", "b")),
+        ))
+        s = tel.summary()["diagnostics"]
+        assert s["errors"] == 1 and s["warnings"] == 1
+        assert s["by_code"]["DX010"] == 1
+        assert "hazards:" in tel.render()
+
+
+# ---------------------------------------------------------------------------
+# plan-IR structural verifier
+# ---------------------------------------------------------------------------
+
+def _lowered_plan():
+    sched = Scheduler(engine=Engine(tile_size=TILE), verify=True)
+    table = np.arange(64, dtype=np.int32)
+    acc = np.zeros(16, np.int32)
+    sched.submit_gather(table, np.full(16, 3, np.int32))
+    sched.submit_rmw(acc, np.arange(8, dtype=np.int32),
+                     np.ones(8, np.int32), op="ADD")
+    report = sched.flush()
+    return report.plan
+
+
+class TestPlanVerifier:
+    def test_real_lowering_passes_all_stages(self):
+        plan = _lowered_plan()     # flush itself verified every stage
+        check_pass(plan, "batch", None)
+
+    def test_dropped_order_ticket_detected(self):
+        plan = _lowered_plan()
+        plan.order = plan.order[:-1]
+        with pytest.raises(VerificationError, match="fair order"):
+            check_pass(plan, "normalize", None)
+
+    def test_duplicate_nid_detected(self):
+        plan = _lowered_plan()
+        plan.leaves[1].nid = plan.leaves[0].nid
+        with pytest.raises(VerificationError, match="duplicate node ids"):
+            check_pass(plan, "normalize", None)
+
+    def test_unknown_stage_rejected(self):
+        with pytest.raises(VerificationError, match="unknown pass"):
+            check_pass(_lowered_plan(), "optimize", None)
+
+    def test_mixed_table_fusion_detected(self):
+        plan = _lowered_plan()
+        from repro.plan import nodes
+        fg = [nodes.unwrap(r) for r in plan.roots
+              if nodes.unwrap(r).kind == "gather"][0]
+        fg.members[0].table_id, old = 0xDEAD, fg.members[0].table_id
+        try:
+            with pytest.raises(VerificationError, match="different tables"):
+                check_pass(plan, "fuse", None)
+        finally:
+            fg.members[0].table_id = old
+
+    def test_env_var_enables_verify(self, monkeypatch):
+        monkeypatch.setenv("DX100_PLAN_VERIFY", "1")
+        assert Scheduler(engine=Engine(tile_size=TILE)).verify
+        monkeypatch.setenv("DX100_PLAN_VERIFY", "0")
+        assert not Scheduler(engine=Engine(tile_size=TILE)).verify
+
+
+# ---------------------------------------------------------------------------
+# launch-input validation (the old opaque-KeyError path)
+# ---------------------------------------------------------------------------
+
+class TestLaunchValidation:
+    def _prog(self):
+        prog, _ = compile_pattern(Pattern(
+            [Access("LD", "A", Load("B", Var("i")), dtype="f32")],
+            name="g"), tile_size=TILE)
+        return prog
+
+    def test_missing_region_is_clear_valueerror(self):
+        prog = self._prog()
+        env = {"B": np.zeros(TILE, np.int32),
+               "__iota__": np.arange(TILE, dtype=np.int32)}
+        with pytest.raises(ValueError, match=r"region\(s\) \['A'\].*DX001"):
+            Engine(tile_size=TILE).run(
+                prog, env, {"tile_base": 0, "N": TILE, "tile_end": TILE})
+
+    def test_missing_register_is_clear_valueerror(self):
+        prog = self._prog()
+        env = {"A": np.zeros(8, np.float32), "B": np.zeros(TILE, np.int32),
+               "__iota__": np.arange(TILE, dtype=np.int32)}
+        with pytest.raises(ValueError, match=r"register\(s\).*DX001"):
+            Engine(tile_size=TILE).run(prog, env, {"tile_base": 0})
+
+    def test_oracle_shares_the_contract(self):
+        prog = self._prog()
+        with pytest.raises(ValueError, match="DX001"):
+            oracle.OracleEngine(tile_size=TILE).run(
+                prog, {"B": np.zeros(TILE, np.int32)}, {"tile_base": 0})
+
+    def test_external_tile_missing_from_spd(self):
+        prog = isa.AccessProgram(
+            (isa.IST("i32", "OUT", "%idx", "%val"),),
+            tile_size=TILE, name="warm")
+        assert set(prog.external_tiles()) == {"%idx", "%val"}
+        with pytest.raises(ValueError, match=r"tile\(s\).*DX001"):
+            prog.check_inputs({"OUT": np.zeros(4, np.int32)}, {}, {})
+
+    def test_rng_duplicate_destination_rejected(self):
+        with pytest.raises(ValueError, match="duplicate destination"):
+            isa.AccessProgram((
+                isa.SLD("i32", "__iota__", "%a", rs1="b", rs2="n", rs3=1),
+                isa.RNG("%x", "%x", "%a", "%a"),
+            ), tile_size=TILE, name="dup").validate()
+
+    def test_unknown_loop_var_is_legality_error(self):
+        with pytest.raises(compiler.LegalityError, match="DX001"):
+            compile_pattern(Pattern(
+                [Access("LD", "A", Load("B", Var("j")), dtype="f32")],
+                name="novar"), tile_size=TILE)
+
+
+# ---------------------------------------------------------------------------
+# analyzer -> cost-model coalescing prior
+# ---------------------------------------------------------------------------
+
+class TestCostModelPrior:
+    def test_prior_routes_unmeasurable_lone_stream_eager(self, ):
+        rng = np.random.default_rng(3)
+        table = rng.normal(size=(64,)).astype(np.float32)
+        sched = Scheduler(engine=Engine(tile_size=TILE),
+                          cost_model=CostModel(measure_limit=4))
+        sched.cost.set_coalescing_prior(id(table), 1.0)
+        t = sched.submit_gather(table, np.full(16, 3, np.int32))
+        rep = sched.flush()
+        g = rep.plan.fused("gather")[0]
+        assert g.backend == "eager"
+        np.testing.assert_array_equal(np.asarray(sched.result(t)),
+                                      table[np.full(16, 3)])
+
+    def test_no_prior_keeps_coalesce_default(self):
+        rng = np.random.default_rng(3)
+        table = rng.normal(size=(64,)).astype(np.float32)
+        sched = Scheduler(engine=Engine(tile_size=TILE),
+                          cost_model=CostModel(measure_limit=4))
+        sched.submit_gather(table, np.full(16, 3, np.int32))
+        rep = sched.flush()
+        assert rep.plan.fused("gather")[0].backend == "bulk"
+
+    def test_high_prior_keeps_coalesce(self):
+        rng = np.random.default_rng(3)
+        table = rng.normal(size=(64,)).astype(np.float32)
+        sched = Scheduler(engine=Engine(tile_size=TILE),
+                          cost_model=CostModel(measure_limit=4))
+        sched.cost.set_coalescing_prior(id(table), 4.0)
+        sched.submit_gather(table, np.full(16, 3, np.int32))
+        rep = sched.flush()
+        assert rep.plan.fused("gather")[0].backend == "bulk"

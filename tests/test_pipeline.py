@@ -157,14 +157,18 @@ class TestSubmitRmw:
         assert gain >= 1.0 and fused <= per
 
     def test_different_ops_chain_in_order(self):
-        sched = Scheduler(engine=Engine(tile_size=TILE))
+        # mixed ops on one table is exactly the DX010 hazard; this test
+        # pins the submission-order chaining the scheduler guarantees
+        # when the window is allowed to run (strict=False)
+        sched = Scheduler(engine=Engine(tile_size=TILE), strict=False)
         table = np.zeros(8, np.int32)
         idx = np.asarray([2, 2, 5], np.int32)
         t1 = sched.submit_rmw(table, idx, np.asarray([3, 4, 9], np.int32),
                               op="ADD")
         t2 = sched.submit_rmw(table, np.asarray([2], np.int32),
                               np.asarray([100], np.int32), op="MAX")
-        sched.flush()
+        report = sched.flush()
+        assert any(d.code == "DX010" for d in report.diagnostics)
         want = np.zeros(8, np.int32)
         want[2], want[5] = 7, 9            # ADD first
         want[2] = max(want[2], 100)        # then MAX

@@ -354,7 +354,7 @@ class TestEdgeCases:
         assert sched.stats["group_errors"] == 1
         assert any(g.error for g in report.groups)
         assert isinstance(sched.poll(bad), FailedResult)
-        with pytest.raises(KeyError):
+        with pytest.raises(ValueError, match=r"region\(s\) \['A'\].*DX001"):
             sched.result(bad)                       # re-raises the cause
         _, spd = sched.result(good)                 # unharmed
         np.testing.assert_allclose(

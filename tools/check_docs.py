@@ -1,6 +1,6 @@
 """Docs consistency gate (CI `docs` job; also run by tests/test_docs.py).
 
-Three checks, all pure-stdlib (no jax import — the docs job stays fast
+Four checks, all pure-stdlib (no jax import — the docs job stays fast
 and install-free):
 
   1. Internal markdown links in README.md, DESIGN.md and docs/*.md
@@ -8,7 +8,9 @@ and install-free):
      that exists (anchors are stripped; http(s) links are skipped).
   2. Every app module under ``src/repro/apps/`` is mentioned in
      DESIGN.md — a new app cannot land undocumented.
-  3. Committed bench snapshots (``benchmarks/snapshots/BENCH_*.json``)
+  3. Every analysis module under ``src/repro/analysis/`` is mentioned
+     in DESIGN.md (§12 documents the DX0xx diagnostic catalog).
+  4. Committed bench snapshots (``benchmarks/snapshots/BENCH_*.json``)
      and ``benchmarks/run.py`` registrations agree both ways: a
      registered module without a committed gate snapshot is unguarded,
      a snapshot without a registration is dead weight that
@@ -63,6 +65,22 @@ def check_apps_documented(root: Path, errors: list) -> None:
                 f"is not mentioned")
 
 
+def check_analysis_documented(root: Path, errors: list) -> None:
+    """Every static-analysis module must be covered by DESIGN.md §12 —
+    the diagnostic catalog is a documented contract, not an
+    implementation detail."""
+    design = (root / "DESIGN.md").read_text()
+    ana_dir = root / "src" / "repro" / "analysis"
+    for mod in sorted(ana_dir.glob("*.py")):
+        name = mod.stem
+        if name == "__init__":
+            continue
+        if name not in design:
+            errors.append(
+                f"DESIGN.md: analysis module src/repro/analysis/{name}.py "
+                f"is not mentioned")
+
+
 def check_bench_snapshots(root: Path, errors: list) -> None:
     run_src = (root / "benchmarks" / "run.py").read_text()
     m = CHOICES_RE.search(run_src)
@@ -97,6 +115,7 @@ def main(argv=None) -> int:
     errors: list = []
     check_links(root, errors)
     check_apps_documented(root, errors)
+    check_analysis_documented(root, errors)
     check_bench_snapshots(root, errors)
     for e in errors:
         print(f"check_docs: {e}", file=sys.stderr)

@@ -1,0 +1,160 @@
+"""dx-lint: static analysis CLI for AccessPrograms, Patterns and traces.
+
+Three modes, combinable in one invocation:
+
+  python tools/dx_lint.py [FILE.py ...]     lint python modules
+  python tools/dx_lint.py --fuzz N          lint the N-seed fuzz corpus
+  python tools/dx_lint.py --trace FILE.json lint a committed traffic trace
+
+File mode imports each module and lints every module-global
+``isa.AccessProgram`` and ``compiler.Pattern`` (compiled first) through
+``repro.analysis.analyze_program``. Fuzz mode is the zero-false-positive
+gate: every ``fuzzer.generate_case`` program and every
+``fuzzer.generate_mixed_case`` window is legal by construction, so ANY
+ERROR-level diagnostic is an analyzer bug and fails the run. Mixed
+windows are lowered (never executed) through a real ``Scheduler`` so the
+window hazard scan (``analysis.hazards``) runs exactly as in production.
+Trace mode replays a ``serve.traffic`` JSON trace through an
+``AccessService`` and reports the per-window diagnostics the telemetry
+collected.
+
+Exit codes: 0 clean (WARNs allowed, reported), 1 ERROR-level findings,
+2 usage / unreadable input.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib.util
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+
+def _report(label: str, diags, counts) -> None:
+    for d in diags:
+        counts[d.severity] = counts.get(d.severity, 0) + 1
+        print(f"{label}: {d.render()}")
+
+
+def lint_file(path: Path, counts) -> int:
+    """Import ``path`` and lint its module-global programs/patterns.
+    Returns the number of lintable objects found."""
+    from repro.analysis import analyze_program
+    from repro.core import compiler, isa
+
+    spec = importlib.util.spec_from_file_location(
+        f"_dxlint_{path.stem}", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+
+    found = 0
+    for name, obj in sorted(vars(mod).items()):
+        if isinstance(obj, compiler.Pattern):
+            prog, _ = compiler.compile_pattern(obj)
+        elif isinstance(obj, isa.AccessProgram):
+            prog = obj
+        else:
+            continue
+        found += 1
+        analysis = analyze_program(prog, externals=frozenset())
+        _report(f"{path.name}:{name}", analysis.diagnostics, counts)
+    return found
+
+
+def lint_fuzz(n_seeds: int, counts) -> None:
+    """Zero-false-positive gate over the legal fuzz corpus: compiled
+    single programs (interval analyzer) and mixed flush windows (hazard
+    scan via a lowering-only Scheduler pass). DX020 float-reduction
+    WARNs are expected on ~a quarter of mixed seeds; ERRORs never."""
+    import numpy as np
+
+    from repro.analysis import analyze_program
+    from repro.core import Engine, Scheduler, compiler
+    from repro.testing import fuzzer
+
+    for seed in range(n_seeds):
+        case = fuzzer.generate_case(seed)
+        prog, _ = compiler.compile_pattern(case.pattern, tile_size=256)
+        env = dict(case.env)
+        env["__iota__"] = np.arange(256, dtype=np.int32)
+        regs = {"tile_base": 0, "N": case.n, "tile_end": case.n}
+        analysis = analyze_program(prog, env=env, regs=regs,
+                                   externals=frozenset())
+        _report(f"fuzz[{seed}]", analysis.diagnostics, counts)
+
+    sched = Engine(tile_size=256)
+    for seed in range(n_seeds):
+        case = fuzzer.generate_mixed_case(seed)
+        win = Scheduler(engine=sched, strict=False)
+        for name, idx in case.gathers:
+            win.submit_gather(case.tables[name], idx)
+        for name, idx, vals, cond in case.rmws:
+            win.submit_rmw(case.tables[name], idx, vals,
+                           op=case.table_ops[name], cond=cond)
+        # lower only — the hazard scan rides the lowering, no execution
+        plan = win.explain().plan
+        _report(f"mixed[{seed}]", plan.diagnostics, counts)
+
+
+def lint_trace(path: Path, counts) -> None:
+    """Replay a committed traffic trace; collect per-window hazards."""
+    from repro.serve import AccessService
+    from repro.serve.traffic import Trace, replay_trace
+
+    trace = Trace.from_json(path.read_text())
+    svc = AccessService(tile_size=256, auto_flush=0)
+    replay_trace(trace, svc)
+    svc.flush()
+    diag = svc.telemetry.summary().get("diagnostics", {})
+    for code, n in sorted(diag.get("by_code", {}).items()):
+        from repro.analysis import CATALOG
+        sev, summary = CATALOG[code]
+        counts[sev] = counts.get(sev, 0) + n
+        print(f"{path.name}: {code} {sev} x{n}: {summary}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="dx_lint", description=__doc__.splitlines()[0])
+    ap.add_argument("files", nargs="*", type=Path,
+                    help="python modules to lint")
+    ap.add_argument("--fuzz", type=int, metavar="N", default=0,
+                    help="lint the first N fuzz-corpus seeds "
+                         "(any ERROR is a false positive -> exit 1)")
+    ap.add_argument("--trace", type=Path, default=None,
+                    help="replay a serve.traffic JSON trace")
+    args = ap.parse_args(argv)
+
+    if not args.files and not args.fuzz and args.trace is None:
+        ap.print_usage(sys.stderr)
+        return 2
+
+    counts: dict = {}
+    n_objects = 0
+    for f in args.files:
+        if not f.exists():
+            print(f"dx_lint: no such file: {f}", file=sys.stderr)
+            return 2
+        n_objects += lint_file(f, counts)
+    if args.files:
+        print(f"linted {len(args.files)} module(s), "
+              f"{n_objects} program(s)/pattern(s)")
+    if args.fuzz:
+        lint_fuzz(args.fuzz, counts)
+        print(f"linted {args.fuzz} fuzz seeds + {args.fuzz} mixed windows")
+    if args.trace is not None:
+        if not args.trace.exists():
+            print(f"dx_lint: no such trace: {args.trace}", file=sys.stderr)
+            return 2
+        lint_trace(args.trace, counts)
+
+    errs = counts.get("ERROR", 0)
+    warns = counts.get("WARN", 0)
+    print(f"dx_lint: {errs} error(s), {warns} warning(s)")
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
