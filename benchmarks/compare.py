@@ -18,6 +18,17 @@ Two row classes are gated:
     loose (default 4.0, i.e. 5x) — the ratio rows are the precise gate;
     the wall-time check only catches order-of-magnitude cliffs.
 
+A third class gates a curve's *shape* rather than its level:
+
+  * monotone rows — rows whose ``derived`` carries
+    ``gate_monotone=<prefix>[,<prefix>...]``. For each prefix, the
+    FRESH run's ``<prefix>_<m>x`` rows are ordered by ``m`` and every
+    step must be non-increasing in us_per_call (up to ``--mono-slack``,
+    default 10%). All points come from one process on one host, so the
+    check is machine-independent in the way absolute times are not —
+    this is the sharded engine's scaling contract: more shards must
+    never make a call slower (1x -> 2x -> 4x -> 8x).
+
 Rows present in the baseline but missing fresh (renamed/removed) are
 reported as warnings, not failures — refreshing the snapshot alongside a
 rename is the documented workflow (run ``benchmarks.run <mod> --json`` and
@@ -32,6 +43,33 @@ import sys
 from pathlib import Path
 
 _RATIO = re.compile(r"gate_ratio=([0-9.]+)")
+_MONO = re.compile(r"gate_monotone=([\w,]+)")
+
+
+def _check_monotone(prefixes: str, frows: dict, slack: float):
+    """Yield (level, message) for each curve named by ``prefixes``
+    (comma-separated): the fresh ``<prefix>_<m>x`` points, ordered by
+    ``m``, must be non-increasing in us_per_call up to ``slack``."""
+    for prefix in prefixes.split(","):
+        pat = re.compile(rf"^{re.escape(prefix)}_(\d+)x$")
+        curve = sorted((int(mm.group(1)), row["us_per_call"])
+                       for name, row in frows.items()
+                       if (mm := pat.match(name)))
+        if len(curve) < 2:
+            yield ("warn", f"{prefix}: monotone gate needs >= 2 fresh "
+                   f"<prefix>_<m>x rows, found {len(curve)}")
+            continue
+        shape = " -> ".join(f"{us:.0f}us@{m}x" for m, us in curve)
+        bad = [(m0, us0, m1, us1)
+               for (m0, us0), (m1, us1) in zip(curve, curve[1:])
+               if us1 > us0 * (1 + slack)]
+        if bad:
+            m0, us0, m1, us1 = bad[0]
+            yield ("fail", f"{prefix}: us/call rises {m0}x -> {m1}x "
+                   f"({us0:.0f}us -> {us1:.0f}us > *{1 + slack:.2f}) — "
+                   f"scaling inversion [{shape}]")
+        else:
+            yield ("ok", f"{prefix}: monotone non-increasing [{shape}]")
 
 
 def _load(path: Path) -> dict:
@@ -48,7 +86,8 @@ def _ratio_of(row: dict):
 
 
 def compare_files(fresh: Path, base: Path, *, threshold: float,
-                  wall_slack: float, name_filter: str):
+                  wall_slack: float, name_filter: str,
+                  mono_slack: float = 0.10):
     """Yields (level, message) pairs; level is 'fail' | 'warn' | 'ok'."""
     frows, brows = _load(fresh), _load(base)
     pat = re.compile(name_filter)
@@ -57,6 +96,10 @@ def compare_files(fresh: Path, base: Path, *, threshold: float,
         if frow is None:
             yield ("warn", f"{base.name}: row {name!r} missing from fresh "
                    "run (renamed? refresh the snapshot)")
+            continue
+        mono = _MONO.search(brow.get("derived", ""))
+        if mono is not None:
+            yield from _check_monotone(mono.group(1), frows, mono_slack)
             continue
         bratio, fratio = _ratio_of(brow), _ratio_of(frow)
         if bratio is not None:
@@ -90,6 +133,8 @@ def main(argv=None) -> int:
                     help="max fractional gate_ratio drop before failing")
     ap.add_argument("--wall-slack", type=float, default=4.0,
                     help="fractional absolute-time slack for wall rows")
+    ap.add_argument("--mono-slack", type=float, default=0.10,
+                    help="per-step fractional slack for monotone curves")
     ap.add_argument("--filter", default="throughput",
                     help="regex of wall-time row names to gate")
     args = ap.parse_args(argv)
@@ -104,7 +149,8 @@ def main(argv=None) -> int:
         compared += 1
         for level, msg in compare_files(
                 fresh, base, threshold=args.threshold,
-                wall_slack=args.wall_slack, name_filter=args.filter):
+                wall_slack=args.wall_slack, name_filter=args.filter,
+                mono_slack=args.mono_slack):
             tag = {"fail": "FAIL", "warn": "WARN", "ok": "  ok"}[level]
             print(f"{tag} {msg}")
             failures += (level == "fail")

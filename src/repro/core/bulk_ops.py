@@ -71,6 +71,20 @@ def _segment_bitwise(vals, seg, num_segments: int, op: str):
     return out.astype(dt)
 
 
+def segment_combine(vals, seg, *, num_segments: int, op: str):
+    """Combine same-segment lanes with ``op`` (any RMW_OPS member): the
+    reorder-safe segment reduction ``bulk_rmw`` applies at the table,
+    exposed for callers that must merge duplicates *before* the table —
+    the sharded engine's pre-exchange combine (one update per distinct
+    destination crosses the fabric). Empty segments read the op identity
+    for ADD/MUL and the dtype extremum for MIN/MAX (callers mask them)."""
+    if op in _SEG_OPS:
+        return _SEG_OPS[op](vals, seg, num_segments=num_segments)
+    if op in _BITWISE_OPS:
+        return _segment_bitwise(vals, seg, num_segments, op)
+    raise ValueError(f"op {op!r} has no segment reduction (RMW_OPS only)")
+
+
 def _maybe_kernel_gather(table, plan, *, interpret):
     from repro.kernels.gather import ops as gops
     return gops.row_table_gather(table, plan, interpret=interpret)

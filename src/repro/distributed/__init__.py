@@ -18,11 +18,14 @@ Quick check (any mesh size that fits the visible devices):
     harness.check_sharded_parity()          # gather+RMW vs NumPy oracle
 """
 from repro.distributed.engine import ShardStats, ShardedEngine
-from repro.distributed.exchange import (masked_unique_count,
+from repro.distributed.exchange import (CODECS, bucket_capacity,
+                                        combine_duplicates, dedup_stream,
+                                        masked_unique_count,
                                         partition_by_owner)
-from repro.distributed.mesh import as_mesh, device_mesh
+from repro.distributed.mesh import as_mesh, device_mesh, shard_row_ranges
 
 __all__ = [
     "ShardedEngine", "ShardStats", "device_mesh", "as_mesh",
-    "partition_by_owner", "masked_unique_count",
+    "shard_row_ranges", "partition_by_owner", "masked_unique_count",
+    "dedup_stream", "combine_duplicates", "CODECS", "bucket_capacity",
 ]

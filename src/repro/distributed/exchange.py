@@ -6,10 +6,29 @@ owns each row. The per-owner sub-streams are *ragged* (data dependent), but
 XLA collectives need static shapes — the same problem ``RowTablePlan``
 solves for row-table tiles, solved the same way: a static per-shard
 capacity plus validity counts. Each shard packs its local requests into a
-``(num_shards, L)`` bucket buffer (capacity ``L`` = the local stream
-length, the worst case where every index targets one owner, so overflow is
-impossible by construction); ``jax.lax.all_to_all(..., tiled=True)`` then
-swaps bucket ``j`` of shard ``i`` with bucket ``i`` of shard ``j``.
+``(num_shards, C)`` bucket buffer; ``jax.lax.all_to_all(..., tiled=True)``
+then swaps bucket ``j`` of shard ``i`` with bucket ``i`` of shard ``j``.
+
+The exchange protocol (DESIGN.md §5) keeps fabric traffic minimal by
+construction, in order:
+
+  1. **dedup before the fabric** — ``dedup_stream`` runs the unique-set
+     pass on each shard's slice *before* partitioning, so duplicate rows
+     never ship (RMW streams use ``combine_duplicates``: same sort, but
+     payload lanes merge with the op so one combined update ships);
+  2. **owner-local lanes never enter the fabric** — callers split the
+     deduped stream into a local part (owner == self, served from the own
+     table slice) and a remote spill, and only the spill is partitioned;
+  3. **measured capacity** — ``capacity`` bounds each bucket to the
+     *measured* worst per-(source, owner) spill (power-of-two bucketed by
+     ``bucket_capacity`` to bound trace diversity), not the worst-case
+     slice length;
+  4. **index compression** — the remote spill is sorted and unique, so
+     its buckets are strictly-ascending row runs; ``encode_bitmap`` /
+     ``encode_delta`` ship those runs as an occupancy bitmap or packed
+     16-bit deltas instead of raw int32 lanes. Both codecs round-trip
+     exactly (set semantics: decode returns the sorted unique valid set),
+     which is what the property suite pins.
 
 Everything here is static-shape jnp, fully jittable, and collective-free —
 the collectives live in ``distributed.engine`` so these primitives stay
@@ -20,11 +39,21 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import reorder
+from repro.core import bulk_ops, isa, reorder
+
+
+def bucket_capacity(n: int, *, floor: int = 8) -> int:
+    """Power-of-two bucket for a measured per-owner spill count: bounds
+    the number of distinct shard_map traces the capacity knob can create
+    (same rationale as the scheduler's ``_bucket_pow2`` stream padding)."""
+    n = int(n)
+    if n <= floor:
+        return floor
+    return 1 << (n - 1).bit_length()
 
 
 def partition_by_owner(idx: jax.Array, valid: jax.Array, *, rows_per: int,
-                       num_shards: int):
+                       num_shards: int, capacity: int | None = None):
     """Pack a local request stream into static per-owner buckets.
 
     Args:
@@ -33,20 +62,28 @@ def partition_by_owner(idx: jax.Array, valid: jax.Array, *, rows_per: int,
       rows_per: rows owned by each shard (equal address-range split —
         ``reorder.shard_bulk_indices``'s layout).
       num_shards: shard count.
+      capacity: per-owner bucket capacity ``C`` (default ``L``, the
+        worst case where every index targets one owner, so overflow is
+        impossible by construction). A smaller, *measured* capacity is
+        the exchange-volume lever — lanes past a bucket's capacity are
+        silently dropped (``mode="drop"``), so callers must size it from
+        exact host-side counts (``ShardedEngine._plan_exchange``) or keep
+        the worst-case default.
 
     Returns ``(send_idx, send_valid, order, slot, sent_counts)``:
-      send_idx    (num_shards*L,) int32: bucket ``o`` (= slice
-                  ``[o*L:(o+1)*L]``) holds the indices owned by shard ``o``,
+      send_idx    (num_shards*C,) int32: bucket ``o`` (= slice
+                  ``[o*C:(o+1)*C]``) holds the indices owned by shard ``o``,
                   in stream order, zero-padded;
-      send_valid  (num_shards*L,) bool: validity of each bucket lane;
+      send_valid  (num_shards*C,) bool: validity of each bucket lane;
       order       (L,) int32: stable owner-sort permutation of the stream
                   (``idx[order]`` is bucket-major) — the key for unpacking
                   the inverse exchange;
       slot        (L,) int32: bucket position of the k-th *sorted* lane
-                  (``num_shards*L`` = dropped, for invalid lanes);
+                  (``num_shards*C`` = dropped, for invalid lanes);
       sent_counts (num_shards,) int32: valid lanes sent to each owner.
     """
     L = int(idx.shape[0])
+    C = L if capacity is None else int(capacity)
     idx = idx.astype(jnp.int32)
     owner, _ = reorder.shard_bulk_indices(
         idx, num_shards=num_shards, n_rows=rows_per * num_shards)
@@ -62,21 +99,23 @@ def partition_by_owner(idx: jax.Array, valid: jax.Array, *, rows_per: int,
         [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
     pos = jnp.arange(L, dtype=jnp.int32)
     rank = pos - start[jnp.clip(s_key, 0, num_shards - 1)]
-    slot = jnp.where(s_key < num_shards, s_key * L + rank,
-                     num_shards * L).astype(jnp.int32)
-    send_idx = jnp.zeros((num_shards * L,), jnp.int32).at[slot].set(
+    slot = jnp.where((s_key < num_shards) & (rank < C), s_key * C + rank,
+                     num_shards * C).astype(jnp.int32)
+    send_idx = jnp.zeros((num_shards * C,), jnp.int32).at[slot].set(
         idx[order], mode="drop")
-    send_valid = jnp.zeros((num_shards * L,), bool).at[slot].set(
+    send_valid = jnp.zeros((num_shards * C,), bool).at[slot].set(
         valid[order], mode="drop")
     return send_idx, send_valid, order, slot, counts
 
 
 def pack_payload(payload: jax.Array, order: jax.Array, slot: jax.Array,
-                 *, num_shards: int) -> jax.Array:
+                 *, num_shards: int, capacity: int | None = None
+                 ) -> jax.Array:
     """Scatter a per-lane payload (RMW values) into the same bucket layout
     ``partition_by_owner`` produced for its indices."""
     L = int(order.shape[0])
-    out = jnp.zeros((num_shards * L,) + payload.shape[1:], payload.dtype)
+    C = L if capacity is None else int(capacity)
+    out = jnp.zeros((num_shards * C,) + payload.shape[1:], payload.dtype)
     return out.at[slot].set(payload[order], mode="drop")
 
 
@@ -103,3 +142,197 @@ def masked_unique_count(idx: jax.Array, valid: jax.Array) -> jax.Array:
     k = jnp.arange(s.shape[0], dtype=jnp.int32)
     first = (k == 0) | (s != jnp.concatenate([s[:1], s[:-1]]))
     return jnp.sum(((k < nv) & first).astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# pre-exchange dedup / combine (the unique-set pass before the fabric)
+# ---------------------------------------------------------------------------
+
+def dedup_stream(idx: jax.Array, valid: jax.Array):
+    """Owner-local unique-set pass over one shard's stream slice, run
+    *before* any lane is considered for the fabric.
+
+    Static-shape dedup of the valid lanes: returns
+    ``(u_idx, u_valid, inv, n_u)`` where ``u_idx`` is (L,) with the
+    distinct valid values sorted ascending in its first ``n_u`` lanes
+    (zero elsewhere), ``u_valid`` marks those lanes, and ``inv`` maps
+    every *original* lane to its value's position in ``u_idx``
+    (``u_idx[inv]`` restores the stream on valid lanes). The sorted-
+    ascending layout is what makes the downstream buckets strictly
+    ascending runs — the property the index codecs compress.
+    """
+    L = int(idx.shape[0])
+    sentinel = jnp.iinfo(jnp.int32).max
+    keyed = jnp.where(valid, idx.astype(jnp.int32), sentinel)
+    order = jnp.argsort(keyed, stable=True)
+    s = keyed[order]
+    k = jnp.arange(L, dtype=jnp.int32)
+    first = (k == 0) | (s != jnp.concatenate([s[:1], s[:-1]]))
+    uid = jnp.cumsum(first.astype(jnp.int32)) - 1      # dedup slot per lane
+    nv = jnp.sum(valid.astype(jnp.int32))
+    lane_valid = k < nv                                 # sorted lane validity
+    u_idx = jnp.zeros((L,), jnp.int32).at[
+        jnp.where(lane_valid, uid, L)].set(s, mode="drop")
+    n_u = jnp.sum((first & lane_valid).astype(jnp.int32))
+    u_valid = k < n_u
+    inv = jnp.zeros((L,), jnp.int32).at[order].set(uid)
+    return u_idx, u_valid, inv, n_u
+
+
+def combine_duplicates(idx: jax.Array, values: jax.Array, valid: jax.Array,
+                       *, op: str):
+    """RMW variant of ``dedup_stream``: duplicate destinations in one
+    shard's slice merge with ``op`` *before* the exchange, so a single
+    combined update ships per distinct row (op must be associative +
+    commutative — the §3.1 RMW restriction — so pre-combining cannot
+    change the final table mod reordering).
+
+    Returns ``(u_idx, u_vals, u_valid, n_u)``: the sorted distinct
+    destinations, the combined payload per destination, and the validity
+    mask. Invalid lanes contribute the op identity.
+    """
+    L = int(idx.shape[0])
+    u_idx, u_valid, inv, n_u = dedup_stream(idx, valid)
+    ident = isa.rmw_identity(op, values.dtype)
+    vshape = (-1,) + (1,) * (values.ndim - 1)
+    vals = jnp.where(valid.reshape(vshape), values,
+                     jnp.asarray(ident, values.dtype))
+    # invalid lanes still carry a uid (the sentinel group); their payload
+    # is the identity so they cannot perturb any real segment, and lanes
+    # past n_u are masked by u_valid anyway
+    seg = jnp.clip(inv, 0, L - 1)
+    u_vals = bulk_ops.segment_combine(vals, seg, num_segments=L, op=op)
+    return u_idx, u_vals, u_valid, n_u
+
+
+# ---------------------------------------------------------------------------
+# index codecs (dense-run compression of the remote spill)
+# ---------------------------------------------------------------------------
+#
+# Both codecs assume the bucket layout ``partition_by_owner`` produces from
+# a *deduped, sorted* stream: each bucket is a strictly ascending run of
+# distinct local row offsets in [0, rows_per). Decoding recovers exactly
+# that sorted set (set semantics), so sender and receiver agree on bucket
+# rank order without shipping it — which is what lets the gather's inverse
+# value exchange route through ``slot`` untouched.
+
+def bitmap_words(rows_per: int) -> int:
+    """int32 words per bucket for the occupancy-bitmap codec."""
+    return -(-int(rows_per) // 32)
+
+
+def delta_words(capacity: int) -> int:
+    """int32 words per bucket for the packed-delta codec: one count word,
+    one base word, then two 16-bit deltas per word."""
+    return 2 + (max(int(capacity) - 1, 0) + 1) // 2
+
+
+def encode_bitmap(send_idx: jax.Array, send_valid: jax.Array, *,
+                  rows_per: int, num_shards: int) -> jax.Array:
+    """Occupancy bitmap of a bucket buffer: bit ``r`` of bucket ``o``'s
+    ``bitmap_words(rows_per)`` int32 words is set iff local row ``r`` of
+    owner ``o`` is requested. Requires the dedup precondition (each
+    (owner, row) at most once per buffer) — guaranteed after
+    ``dedup_stream`` — so a scatter-add sets each bit exactly once."""
+    ns, W = int(num_shards), bitmap_words(rows_per)
+    C = int(send_idx.shape[0]) // ns
+    bucket = jnp.arange(ns * C, dtype=jnp.int32) // C
+    local = send_idx.astype(jnp.int32) - bucket * rows_per
+    local = jnp.clip(local, 0, rows_per - 1)
+    word = bucket * W + local // 32
+    bit = (local % 32).astype(jnp.uint32)
+    contrib = jnp.where(send_valid, (jnp.uint32(1) << bit), jnp.uint32(0))
+    return jnp.zeros((ns * W,), jnp.uint32).at[word].add(contrib)
+
+
+def decode_bitmap(bitmap: jax.Array, *, rows_per: int, num_shards: int,
+                  capacity: int):
+    """Inverse of ``encode_bitmap``: per bucket, the sorted local rows of
+    the set bits, padded to ``capacity`` lanes. Returns
+    ``(local_rows, valid)`` of shape (num_shards*capacity,). Exact
+    round-trip so long as no bucket carries more than ``capacity`` set
+    bits (the same measured-capacity contract the raw path has)."""
+    ns, W, C = int(num_shards), bitmap_words(rows_per), int(capacity)
+    bits = jnp.arange(32, dtype=jnp.uint32)
+    # (ns*W, 32) -> (ns, W*32): dense occupancy per bucket
+    occ = ((bitmap[:, None] >> bits[None, :]) & jnp.uint32(1)).astype(bool)
+    occ = occ.reshape(ns, W * 32)
+    row = jnp.arange(W * 32, dtype=jnp.int32)
+    keyed = jnp.where(occ & (row[None, :] < rows_per), row[None, :],
+                      jnp.iinfo(jnp.int32).max)
+    topc = jnp.sort(keyed, axis=1)[:, :C]
+    valid = topc < rows_per
+    local = jnp.where(valid, topc, 0)
+    return local.reshape(ns * C), valid.reshape(ns * C)
+
+
+def encode_delta(send_idx: jax.Array, send_valid: jax.Array, *,
+                 rows_per: int, num_shards: int) -> jax.Array:
+    """Packed-delta codec for a bucket buffer: per bucket, word 0 is the
+    valid-lane count, word 1 the first local row, and the remaining words
+    pack two 16-bit successive deltas each. Exact for any strictly
+    ascending bucket run with ``rows_per <= 1 << 16`` (deltas are bounded
+    by the owner's row extent — a *static* guarantee, which is why the
+    cost model only ever picks this codec for such tables)."""
+    if rows_per > (1 << 16):
+        raise ValueError(f"delta codec needs rows_per <= 65536, got "
+                         f"{rows_per} (16-bit packed deltas)")
+    ns = int(num_shards)
+    C = int(send_idx.shape[0]) // ns
+    W = delta_words(C)
+    bucket = jnp.arange(ns * C, dtype=jnp.int32) // C
+    local = jnp.clip(send_idx.astype(jnp.int32) - bucket * rows_per,
+                     0, rows_per - 1)
+    local = jnp.where(send_valid, local, 0)
+    b = local.reshape(ns, C)
+    prev = jnp.concatenate([jnp.zeros((ns, 1), jnp.int32), b[:, :-1]],
+                           axis=1)
+    delta = (b - prev)[:, 1:]                       # (ns, C-1), in [0, 2^16)
+    npairs = (C - 1 + 1) // 2
+    dpad = jnp.concatenate(
+        [delta, jnp.zeros((ns, 2 * npairs - (C - 1)), jnp.int32)], axis=1) \
+        if C > 1 else jnp.zeros((ns, 2 * npairs), jnp.int32)
+    pairs = dpad.reshape(ns, npairs, 2)
+    packed = (pairs[:, :, 0] | (pairs[:, :, 1] << 16)).astype(jnp.int32)
+    count = jnp.sum(send_valid.reshape(ns, C).astype(jnp.int32), axis=1,
+                    keepdims=True)
+    base = b[:, :1]
+    return jnp.concatenate([count, base, packed], axis=1).reshape(ns * W)
+
+
+def decode_delta(words: jax.Array, *, rows_per: int, num_shards: int,
+                 capacity: int):
+    """Inverse of ``encode_delta``: per bucket, cumulative-sum the packed
+    deltas back into the ascending local-row run. Returns
+    ``(local_rows, valid)`` of shape (num_shards*capacity,)."""
+    ns, C = int(num_shards), int(capacity)
+    W = delta_words(C)
+    w = words.reshape(ns, W)
+    count, base, packed = w[:, 0], w[:, 1], w[:, 2:]
+    lo = packed & 0xFFFF
+    hi = (packed >> 16) & 0xFFFF
+    deltas = jnp.stack([lo, hi], axis=2).reshape(ns, -1)[:, :max(C - 1, 0)]
+    runs = jnp.concatenate([base[:, None], deltas], axis=1)[:, :C]
+    local = jnp.cumsum(runs, axis=1)
+    lane = jnp.arange(C, dtype=jnp.int32)
+    valid = lane[None, :] < count[:, None]
+    local = jnp.where(valid, local, 0)
+    return local.reshape(ns * C).astype(jnp.int32), valid.reshape(ns * C)
+
+
+#: codec name -> (encode, decode, words-per-bucket fn(rows_per, capacity))
+CODECS = {
+    "bitmap": (encode_bitmap, decode_bitmap,
+               lambda rows_per, cap: bitmap_words(rows_per)),
+    "delta": (encode_delta, decode_delta,
+              lambda rows_per, cap: delta_words(cap)),
+}
+
+
+def codec_wire_words(codec: str, *, rows_per: int, capacity: int) -> int:
+    """int32 words one bucket costs on the wire under ``codec`` ("raw"
+    ships ``capacity`` index lanes). The cost model compares these to
+    choose the per-node exchange encoding."""
+    if codec == "raw":
+        return int(capacity)
+    return int(CODECS[codec][2](rows_per, capacity))

@@ -19,6 +19,20 @@ from jax.sharding import Mesh
 DEFAULT_AXIS = "shards"
 
 
+def shard_row_ranges(n_rows: int, num_shards: int) -> list:
+    """Half-open ``(lo, hi)`` row range each shard owns under the equal
+    address-range split (ceil-div ``rows_per``; the last shard may own a
+    short — possibly empty — remainder). Pure host-side arithmetic
+    mirroring ``reorder.shard_bulk_indices``'s owner layout, for tests
+    and the fuzzer's shard-boundary / single-owner-hot streams."""
+    n_rows, num_shards = int(n_rows), int(num_shards)
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    rows_per = -(-n_rows // num_shards)
+    return [(min(o * rows_per, n_rows), min((o + 1) * rows_per, n_rows))
+            for o in range(num_shards)]
+
+
 def device_mesh(num_shards: int | None = None, *,
                 axis: str = DEFAULT_AXIS) -> Mesh:
     """A 1-D mesh over the first ``num_shards`` visible devices

@@ -20,7 +20,7 @@ registers "sharded", and the registry — not duck-typing — routes every
 window.
 """
 from repro.plan import cost, emit, nodes, passes
-from repro.plan.cost import CostModel
+from repro.plan.cost import CostModel, ExchangePlan
 from repro.plan.emit import (Backend, EmitContext, backend_for, execute,
                              get_backend, register_backend)
 from repro.plan.explain import Explanation
@@ -38,7 +38,8 @@ explain = explain_plan
 
 __all__ = [
     "cost", "emit", "explain", "nodes", "passes",
-    "CostModel", "Backend", "EmitContext", "backend_for", "execute",
+    "CostModel", "ExchangePlan", "Backend", "EmitContext", "backend_for",
+    "execute",
     "get_backend", "register_backend", "Explanation", "explain_plan",
     "BatchedGroup", "FusedGather", "FusedRmw", "GatherNode", "PassDelta",
     "Plan", "PlanNode", "ProgramNode", "RmwNode", "ShardedNode", "unwrap",

@@ -30,27 +30,36 @@ class Backend:
     passes: Dict[str, Callable]            # pipeline slot -> pass fn
     emitters: Dict[tuple, Callable]        # (kind, backend tag) -> fn
     sharded: bool = False                  # mesh-capable placement
+    # optional route-stage prefetchers, same (kind, backend tag) keys: run
+    # for every root *before* any emitter so cross-node exchanges overlap
+    # owner-local compute (see repro.distributed.engine's split API)
+    prefetchers: Dict[tuple, Callable] = dataclasses.field(
+        default_factory=dict)
 
 
 _REGISTRY: Dict[str, Backend] = {}
 
 
 def register_backend(name: str, *, passes_override=None, emitters=None,
-                     base: Optional[str] = None,
-                     sharded: bool = False) -> Backend:
+                     base: Optional[str] = None, sharded: bool = False,
+                     prefetchers=None) -> Backend:
     """Register (or re-register) a backend. ``base`` inherits another
-    backend's pass and emitter tables before applying the overrides."""
+    backend's pass, emitter and prefetcher tables before applying the
+    overrides."""
     ptable = dict(passes.DEFAULT_PASSES)
     etable: Dict[tuple, Callable] = {}
+    ftable: Dict[tuple, Callable] = {}
     if base is not None:
         b = get_backend(base)
         ptable.update(b.passes)
         etable.update(b.emitters)
+        ftable.update(b.prefetchers)
         sharded = sharded or b.sharded
     ptable.update(passes_override or {})
     etable.update(emitters or {})
+    ftable.update(prefetchers or {})
     backend = Backend(name=name, passes=ptable, emitters=etable,
-                      sharded=sharded)
+                      sharded=sharded, prefetchers=ftable)
     _REGISTRY[name] = backend
     return backend
 
@@ -86,6 +95,9 @@ class EmitContext:
     rmw_members: Dict = dataclasses.field(default_factory=dict)
     failed_tables: Dict = dataclasses.field(default_factory=dict)
     group_reports: list = dataclasses.field(default_factory=list)
+    # node nid -> in-flight route-stage handle (filled by prefetchers,
+    # drained by the matching emitters)
+    exchange_inflight: Dict = dataclasses.field(default_factory=dict)
     # scheduler-provided factories (keeps this module core-type free)
     make_failed: Callable = None           # Exception -> FailedResult
     make_group_error: Callable = None      # (node, Exception) -> report
@@ -93,7 +105,27 @@ class EmitContext:
 
 def execute(plan: nodes.Plan, ctx: EmitContext, backend: Backend):
     """Emit every root node; resolve RMW tickets to end-of-window
-    state. Per-node failures isolate (see module docstring)."""
+    state. Per-node failures isolate (see module docstring).
+
+    Before the emit walk, every root with a registered prefetcher gets
+    its route stage dispatched — all cross-node exchanges go on the
+    fabric first, so node k's owner-local compute overlaps node k+1's
+    communication. A prefetch failure is soft: the node simply falls
+    back to its fused single-dispatch emitter."""
+    if backend.prefetchers:
+        for node in plan.roots:
+            inner = nodes.unwrap(node)
+            if getattr(inner, "error", None) is not None:
+                continue
+            pf = backend.prefetchers.get((inner.kind, inner.backend))
+            if pf is None:
+                continue
+            try:
+                pf(node, ctx)
+            except Exception:
+                ctx.exchange_inflight.pop(node.nid, None)
+                ctx.stats["prefetch_errors"] = \
+                    ctx.stats.get("prefetch_errors", 0) + 1
     for node in plan.roots:
         inner = nodes.unwrap(node)
         err = getattr(inner, "error", None)

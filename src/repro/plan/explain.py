@@ -44,7 +44,10 @@ def _root_lines(root: nodes.PlanNode) -> list:
     lines = []
     mesh = ""
     if isinstance(root, nodes.ShardedNode):
-        mesh = f" mesh={root.num_shards} (sharded#{root.nid})"
+        lf = ("?" if root.est_local_fraction is None
+              else f"{root.est_local_fraction:.2f}")
+        mesh = (f" mesh={root.num_shards} (sharded#{root.nid} "
+                f"place={root.placement} codec={root.codec} local~{lf})")
         root = root.inner
     if isinstance(root, nodes.BatchedGroup):
         lines.append(

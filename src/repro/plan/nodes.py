@@ -221,12 +221,26 @@ class FusedRmw(PlanNode):
 @dataclasses.dataclass
 class ShardedNode(PlanNode):
     """Mesh-placement wrapper: ``inner`` executes owner-locally across
-    ``num_shards`` devices (registered by ``repro.distributed``)."""
+    ``num_shards`` devices (registered by ``repro.distributed``).
+
+    The shard pass additionally annotates the *exchange plan* the cost
+    model chose for this node (``repro.plan.cost.ExchangePlan``):
+    ``placement`` ("block" | "owner" lane placement), ``codec`` ("raw" |
+    "bitmap" | "delta" wire encoding of the remote index spill) and the
+    measured estimates ``explain()`` renders. ``capacity`` is the
+    lowering-time capacity *estimate*; the engine re-measures it at
+    emission (data-dependent buffer sizes are never replayed from the
+    plan cache).
+    """
     kind = "sharded"
     nid: int
     inner: PlanNode = None
     num_shards: int = 1
     axis: str = "shards"
+    placement: str = "block"
+    codec: str = "raw"
+    capacity: int = 0
+    est_local_fraction: Optional[float] = None
 
     def tickets(self):
         return self.inner.tickets()

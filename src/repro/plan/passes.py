@@ -61,6 +61,10 @@ class Skeleton:
     rmw_backends: tuple = ()       # "bulk" | "sharded"
     group_backends: tuple = ()     # "eager" | "vmap" per wave
     group_shared: tuple = ()       # frozenset per wave
+    # (placement, codec) per ShardedNode in root order. Policy only: the
+    # measured capacity is data-dependent and is re-measured per window
+    # (a replayed buffer bound could drop lanes on different data).
+    exchange_plans: tuple = ()
 
 
 @dataclasses.dataclass
@@ -396,8 +400,11 @@ def window_signature(leaves, max_batch: int, backend: str) -> tuple:
 def skeleton_of(plan: nodes.Plan) -> Skeleton:
     """Decision record of a fresh lowering, replayable on a later window
     with the same ``window_signature``."""
-    gp, gb, rb, pb, ps = [], [], [], [], []
-    for node in map(nodes.unwrap, plan.roots):
+    gp, gb, rb, pb, ps, xp = [], [], [], [], [], []
+    for root in plan.roots:
+        if isinstance(root, nodes.ShardedNode):
+            xp.append((root.placement, root.codec))
+        node = nodes.unwrap(root)
         if getattr(node, "error", None) is not None:
             continue                   # error nodes carry no decisions
         if node.kind == "gather":
@@ -410,4 +417,4 @@ def skeleton_of(plan: nodes.Plan) -> Skeleton:
             ps.append(node.shared)
     return Skeleton(gather_paths=tuple(gp), gather_backends=tuple(gb),
                     rmw_backends=tuple(rb), group_backends=tuple(pb),
-                    group_shared=tuple(ps))
+                    group_shared=tuple(ps), exchange_plans=tuple(xp))

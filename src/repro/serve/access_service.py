@@ -350,6 +350,10 @@ class AccessService:
         self.telemetry.on_flush(handle.report.order, t0, max(t1, t0),
                                 pending_before=pending)
         self.telemetry.on_diagnostics(handle.report.diagnostics)
+        if handle.report.shard_stats:
+            # bound method, not its result: folding the exchange stats
+            # materializes device arrays, which summary() defers
+            self.telemetry.on_exchange(handle.report.exchange_summary)
         if self.controller is not None:
             self.controller.observe_flush(
                 len(handle.report.order), t1 - t0, handle.report, t1,
@@ -413,7 +417,9 @@ class AccessService:
     def stats(self) -> dict:
         """Merged serving report: scheduler + engine compile-cache
         counters, the telemetry summary (per-tenant latency percentiles,
-        throughput, rejects, window-depth histogram), and the
+        throughput, rejects, window-depth histogram, and — on a mesh —
+        the folded exchange record: local_fraction, bytes_on_wire,
+        compression ratio, overlap; ``traffic.exchange``), and the
         controller's state snapshot."""
         return {**self.scheduler.stats,
                 "engine": dict(self.scheduler.engine.stats),

@@ -78,6 +78,13 @@ class Telemetry:
         self._diag_by_tenant: Dict[str, Dict[str, int]] = {}
         self.n_diag_errors = 0
         self.n_diag_warnings = 0
+        # mesh exchange accounting: queued thunks (one per sharded
+        # window, typically ``FlushReport.exchange_summary``) fold into
+        # the accumulator only when read — evaluating one materializes
+        # ShardStats (a device sync), which must never happen on the
+        # flush hot path
+        self._exchange_thunks: List = []
+        self._exchange_acc: Optional[Dict[str, float]] = None
 
     # -- event feed ----------------------------------------------------------
 
@@ -141,7 +148,58 @@ class Telemetry:
                 per["errors" if d.severity == "ERROR"
                     else "warnings"] += 1
 
+    def on_exchange(self, summarize) -> None:
+        """Queue one sharded window's exchange record. ``summarize`` is a
+        zero-arg callable returning ``FlushReport.exchange_summary()``'s
+        dict (or None) — pass the *bound method*, not its result, so the
+        device sync it implies is deferred to ``summary()`` time."""
+        self._exchange_thunks.append(summarize)
+
     # -- folding -------------------------------------------------------------
+
+    def exchange_summary(self) -> Optional[dict]:
+        """Folded mesh-exchange record across every sharded window seen
+        so far: post-dedup lanes, the fraction served without fabric
+        traffic, bytes on the wire (and the codec's compression ratio
+        over raw int32 lanes), and the mean route/exec overlap. None
+        until a sharded window reports. Draining the queued thunks may
+        sync the device — call off the flush hot path."""
+        thunks, self._exchange_thunks = self._exchange_thunks, []
+        for thunk in thunks:
+            s = thunk()
+            if s is None:
+                continue
+            acc = self._exchange_acc
+            if acc is None:
+                acc = self._exchange_acc = {
+                    "windows": 0, "nodes": 0, "lanes": 0,
+                    "local_lanes": 0.0, "bytes_on_wire": 0,
+                    "idx_bytes": 0, "idx_bytes_raw": 0.0,
+                    "overlap_sum": 0.0, "overlap_n": 0}
+            acc["windows"] += 1
+            acc["nodes"] += s["nodes"]
+            acc["lanes"] += s["lanes"]
+            acc["local_lanes"] += s["local_fraction"] * s["lanes"]
+            acc["bytes_on_wire"] += s["bytes_on_wire"]
+            acc["idx_bytes"] += s["idx_bytes"]
+            acc["idx_bytes_raw"] += s["compression_ratio"] * s["idx_bytes"]
+            if s["overlap_fraction"] is not None:
+                acc["overlap_sum"] += s["overlap_fraction"]
+                acc["overlap_n"] += 1
+        acc = self._exchange_acc
+        if acc is None:
+            return None
+        return {
+            "windows": acc["windows"],
+            "nodes": acc["nodes"],
+            "lanes": acc["lanes"],
+            "local_fraction": acc["local_lanes"] / max(acc["lanes"], 1),
+            "bytes_on_wire": acc["bytes_on_wire"],
+            "compression_ratio": (acc["idx_bytes_raw"] / acc["idx_bytes"]
+                                  if acc["idx_bytes"] else 1.0),
+            "overlap_fraction": (acc["overlap_sum"] / acc["overlap_n"]
+                                 if acc["overlap_n"] else None),
+        }
 
     def tenant_stats(self, tenant: str) -> TenantStats:
         xs = self._lat.get(tenant, [])
@@ -208,6 +266,7 @@ class Telemetry:
                 "by_tenant": {t: dict(v) for t, v in
                               sorted(self._diag_by_tenant.items())},
             },
+            "exchange": self.exchange_summary(),
         }
 
     def render(self, *, top: int = 8) -> str:
@@ -230,6 +289,15 @@ class Telemetry:
             lines.append(
                 f"hazards: {dg['errors']} errors, {dg['warnings']} "
                 f"warnings, by code {dg['by_code']}")
+        ex = s["exchange"]
+        if ex is not None:
+            ov = ("n/a" if ex["overlap_fraction"] is None
+                  else f"{ex['overlap_fraction']:.2f}")
+            lines.append(
+                f"exchange: {ex['lanes']} lanes over {ex['windows']} "
+                f"sharded windows, local={ex['local_fraction']:.2f}, "
+                f"wire={ex['bytes_on_wire']}B "
+                f"(cx={ex['compression_ratio']:.2f}), overlap={ov}")
         rows = sorted(((t, r) for t, r in s["tenants"].items() if r["n"]),
                       key=lambda e: -e[1]["p99_us"])[:top]
         if rows:

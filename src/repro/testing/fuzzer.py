@@ -257,6 +257,26 @@ def generate_mixed_case(seed: int) -> MixedFlushCase:
             table_ops[f"R{t}"] = str(rng.choice(isa.RMW_OPS))
 
     def stream(rows: int, n: int) -> np.ndarray:
+        # ~1/8 of streams are sharding hazards, so the mesh's exchange
+        # protocol (dedup, owner split, measured capacity, codecs) gets
+        # fuzzed by the same corpus the single-device paths run:
+        #   * boundary-straddling — lanes packed onto the owner-range
+        #     edges of every mesh size in {2, 4, 8};
+        #   * single-owner-hot — all traffic lands in one shard's range,
+        #     the worst case for a measured per-(source, owner) capacity.
+        r = rng.random()
+        if n and r < 0.0625:
+            from repro.distributed.mesh import shard_row_ranges
+            edges = [np.clip(lo + d, 0, rows - 1) for m in (2, 4, 8)
+                     for lo, hi in shard_row_ranges(rows, m) if lo < hi
+                     for d in (-1, 0)]
+            return rng.choice(np.unique(edges), size=n).astype(np.int32)
+        if n and r < 0.125:
+            from repro.distributed.mesh import shard_row_ranges
+            ranges = [rg for rg in shard_row_ranges(rows, 8)
+                      if rg[0] < rg[1]]
+            lo, hi = ranges[int(rng.integers(0, len(ranges)))]
+            return rng.integers(lo, hi, size=n).astype(np.int32)
         s = rng.integers(0, rows, size=n).astype(np.int32)
         if n and rng.random() < 0.125:      # OOB poison (clamp/drop policy)
             k = max(1, n // 8)

@@ -343,8 +343,9 @@ def default_sharded_cases(seed: int = 0, *, n_rows: int = 257,
 
     Index distributions span the paper's microbenchmark regimes (uniform,
     zipf-skewed, blocked) plus the sharding-specific hazards: rows sitting
-    exactly on the owner boundaries of every mesh size in {2, 4, 8}, an
-    all-duplicates stream, an empty stream, and an OOB stream (negatives
+    exactly on the owner boundaries of every mesh size in {2, 4, 8}, a
+    single-owner hotspot (all lanes through one shard's fabric bucket),
+    an all-duplicates stream, an empty stream, and an OOB stream (negatives
     + overshoots — the unified policy clamps them for gathers and drops
     them for RMWs, identically at every mesh size). RMW cases cover every
     ``RMW_OPS`` combine on an integer table (order-independent mod 2^32,
@@ -366,6 +367,16 @@ def default_sharded_cases(seed: int = 0, *, n_rows: int = 257,
             return rng.choice(edges, size=n).astype(np.int32)
         if kind == "dup":
             return np.full(n, int(rng.integers(0, n_rows)), np.int32)
+        if kind == "owner_hot":
+            # every lane in one mesh-8 shard's range: the single-owner
+            # hotspot that maximizes one (source, owner) fabric bucket
+            rows_per = -(-n_rows // 8)
+            o = int(rng.integers(0, 8))
+            lo = o * rows_per
+            hi = min(lo + rows_per, n_rows)
+            if lo >= hi:
+                lo, hi = 0, rows_per
+            return rng.integers(lo, hi, size=n).astype(np.int32)
         if kind == "oob":
             s = streams.make_indices(rng, n_rows, n, "uniform")
             pos = rng.choice(n, size=n // 4, replace=False)
@@ -380,7 +391,8 @@ def default_sharded_cases(seed: int = 0, *, n_rows: int = 257,
     t2 = rng.normal(size=(n_rows, 6)).astype(np.float32)
     ti = rng.integers(0, 2 ** 15, size=(n_rows,)).astype(np.int32)
     cases = []
-    for kind in ("uniform", "zipf", "blocked", "boundary", "dup", "oob"):
+    for kind in ("uniform", "zipf", "blocked", "boundary", "dup",
+                 "owner_hot", "oob"):
         cases.append(("gather", t1, stream(kind)))
     cases.append(("gather", t2, stream("uniform")))
     cases.append(("gather", t1, np.zeros((0,), np.int32)))
@@ -392,6 +404,9 @@ def default_sharded_cases(seed: int = 0, *, n_rows: int = 257,
     cases.append(("rmw", ti, stream("oob"),
                   rng.integers(0, 2 ** 10, size=n_idx).astype(np.int32),
                   "ADD"))
+    cases.append(("rmw", ti, stream("owner_hot"),
+                  rng.integers(0, 2 ** 10, size=n_idx).astype(np.int32),
+                  "XOR"))
     return cases
 
 

@@ -1,0 +1,154 @@
+"""Property suite for the exchange codecs (DESIGN.md §5 step 4).
+
+Pins the contract the sharded engine's wire format depends on: after
+``dedup_stream`` + ``partition_by_owner``, every bucket is a strictly
+ascending run of distinct local rows, and both index codecs round-trip
+that run **exactly** (set semantics) at any mesh size — including over
+adversarial streams (empty, all-duplicate, monotone, zipf-skewed, and
+OOB-poisoned). The primitives are collective-free, so everything here
+runs on a single device.
+
+The randomized half uses ``hypothesis`` when available and skips
+cleanly when not; the deterministic adversarial cases always run.
+"""
+import numpy as np
+import pytest
+
+jnp = pytest.importorskip("jax.numpy")
+
+from repro.distributed import exchange  # noqa: E402
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+MESHES = (1, 2, 4, 8)
+
+
+def _oracle_buckets(idx, valid, *, rows_per, num_shards):
+    """Per-owner sorted unique local rows — what a decoder must recover."""
+    h = np.asarray(idx)[np.asarray(valid)]
+    owner = np.clip(h // rows_per, 0, num_shards - 1)
+    return [np.unique(h[owner == o]) - o * rows_per
+            for o in range(num_shards)]
+
+
+def _roundtrip(codec, idx, valid, *, rows_per, num_shards):
+    """dedup -> partition -> encode -> decode; assert exact set recovery
+    and that the wire cost matches ``codec_wire_words``."""
+    want = _oracle_buckets(idx, valid, rows_per=rows_per,
+                           num_shards=num_shards)
+    cap = exchange.bucket_capacity(max((w.shape[0] for w in want),
+                                       default=0))
+    u_idx, u_valid, _, _ = exchange.dedup_stream(
+        jnp.asarray(idx.astype(np.int32)), jnp.asarray(valid))
+    send_idx, send_valid, _, _, sent = exchange.partition_by_owner(
+        u_idx, u_valid, rows_per=rows_per, num_shards=num_shards,
+        capacity=cap)
+    np.testing.assert_array_equal(
+        np.asarray(sent), [w.shape[0] for w in want])
+    enc, dec, _ = exchange.CODECS[codec]
+    words = enc(send_idx, send_valid, rows_per=rows_per,
+                num_shards=num_shards)
+    assert words.shape[0] == num_shards * exchange.codec_wire_words(
+        codec, rows_per=rows_per, capacity=cap)
+    local, lvalid = dec(words, rows_per=rows_per, num_shards=num_shards,
+                        capacity=cap)
+    local, lvalid = np.asarray(local), np.asarray(lvalid)
+    for o in range(num_shards):
+        got = np.sort(local[o * cap:(o + 1) * cap]
+                      [lvalid[o * cap:(o + 1) * cap]])
+        np.testing.assert_array_equal(got, want[o], err_msg=(
+            f"codec={codec} owner={o} mesh={num_shards}"))
+
+
+def _adversarial_streams(rows):
+    rng = np.random.default_rng(0)
+    zipf = np.minimum(rng.zipf(1.3, size=256) - 1, rows - 1)
+    poisoned = rng.integers(-rows, 2 * rows, size=200)
+    return {
+        "empty": (np.zeros(16, np.int64), np.zeros(16, bool)),
+        "all_dup": (np.full(64, rows // 2), np.ones(64, bool)),
+        "monotone": (np.arange(rows), np.ones(rows, bool)),
+        "zipf": (zipf, np.ones(zipf.shape[0], bool)),
+        # OOB lanes arrive masked invalid (the engine's RMW discipline);
+        # the codecs must not let their garbage perturb any bucket
+        "oob_poisoned": (poisoned, (poisoned >= 0) & (poisoned < rows)),
+    }
+
+
+@pytest.mark.parametrize("codec", sorted(exchange.CODECS))
+@pytest.mark.parametrize("name", sorted(_adversarial_streams(256)))
+@pytest.mark.parametrize("mesh", MESHES)
+def test_codec_roundtrip_adversarial(codec, name, mesh):
+    rows = 256
+    idx, valid = _adversarial_streams(rows)[name]
+    _roundtrip(codec, idx, valid, rows_per=-(-rows // mesh),
+               num_shards=mesh)
+
+
+def test_delta_rejects_wide_tables():
+    """16-bit packed deltas are only legal for rows_per <= 65536 — the
+    static guarantee the cost model relies on when it offers "delta"."""
+    with pytest.raises(ValueError, match="65536"):
+        exchange.encode_delta(jnp.zeros(8, jnp.int32),
+                              jnp.zeros(8, bool),
+                              rows_per=(1 << 16) + 1, num_shards=1)
+
+
+def test_dedup_stream_contract():
+    """First n_u lanes strictly ascending; inv restores the stream."""
+    rng = np.random.default_rng(5)
+    idx = rng.integers(0, 40, size=128).astype(np.int32)
+    valid = rng.random(128) < 0.8
+    u_idx, u_valid, inv, n_u = exchange.dedup_stream(
+        jnp.asarray(idx), jnp.asarray(valid))
+    u_idx, n_u = np.asarray(u_idx), int(n_u)
+    assert n_u == np.unique(idx[valid]).shape[0]
+    np.testing.assert_array_equal(u_idx[:n_u], np.unique(idx[valid]))
+    assert np.asarray(u_valid).sum() == n_u
+    restored = u_idx[np.asarray(inv)]
+    np.testing.assert_array_equal(restored[valid], idx[valid])
+
+
+def test_combine_duplicates_matches_segment_oracle():
+    rng = np.random.default_rng(6)
+    idx = rng.integers(0, 24, size=96).astype(np.int32)
+    vals = rng.integers(1, 9, size=96).astype(np.int32)
+    valid = rng.random(96) < 0.7
+    u_idx, u_vals, u_valid, n_u = exchange.combine_duplicates(
+        jnp.asarray(idx), jnp.asarray(vals), jnp.asarray(valid), op="ADD")
+    u_idx, u_vals, n_u = np.asarray(u_idx), np.asarray(u_vals), int(n_u)
+    want_keys = np.unique(idx[valid])
+    np.testing.assert_array_equal(u_idx[:n_u], want_keys)
+    want = np.array([vals[valid & (idx == k)].sum() for k in want_keys])
+    np.testing.assert_array_equal(u_vals[:n_u], want)
+
+
+if HAVE_HYPOTHESIS:
+
+    stream = st.lists(st.integers(min_value=-64, max_value=320),
+                      min_size=0, max_size=200)
+
+    @settings(max_examples=30, deadline=None)
+    @given(raw=stream, mesh=st.sampled_from(MESHES),
+           codec=st.sampled_from(sorted(exchange.CODECS)))
+    def test_codec_roundtrip_property(raw, mesh, codec):
+        rows = 256
+        idx = np.asarray(raw + [0], dtype=np.int64)  # never zero-length
+        valid = (idx >= 0) & (idx < rows)
+        _roundtrip(codec, idx, valid, rows_per=-(-rows // mesh),
+                   num_shards=mesh)
+
+    @settings(max_examples=30, deadline=None)
+    @given(raw=stream)
+    def test_dedup_is_sorted_unique_property(raw):
+        idx = np.asarray(raw + [0], dtype=np.int64)
+        valid = (idx >= 0) & (idx < 256)
+        u_idx, _, _, n_u = exchange.dedup_stream(
+            jnp.asarray(idx.astype(np.int32)), jnp.asarray(valid))
+        np.testing.assert_array_equal(np.asarray(u_idx)[:int(n_u)],
+                                      np.unique(idx[valid]))
